@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, CSV rows, standard worlds."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, *, repeats: int = 1) -> tuple[float, object]:
+    """(seconds, last result) — single-shot by default (pipelines are
+    seconds-scale; jit warmup dominates the first call and is included once
+    per approach, matching how the paper measures end-to-end time)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    return (time.perf_counter() - t0) / repeats, out
+
+
+def centralized_truth(batch, forest, rho=2.0):
+    from repro.core import centralized_similar_pairs, encode_batch, forest_tables
+    from repro.core.communities import maximal_cliques
+
+    enc = encode_batch(batch, forest_tables(forest))
+    cl, cr, _ = centralized_similar_pairs(enc, rho=rho)
+    pairs = {(int(a), int(b)) for a, b in zip(cl, cr)}
+    return pairs, maximal_cliques(pairs)
+
+
+def approaches(forest, pair_capacity=1 << 20):
+    """The paper's five approaches as candidate_fn factories (None = SSH)."""
+    from repro.core import brp_candidates, minhash_candidates, type_codes
+
+    return {
+        "anotherme": None,
+        "minhash": lambda e, b: minhash_candidates(
+            type_codes(e), b.lengths, num_perm=16, bands=4,
+            pair_capacity=pair_capacity,
+        ),
+        "brp": lambda e, b: brp_candidates(
+            type_codes(e), b.lengths, num_types=forest.num_types,
+            pair_capacity=pair_capacity,
+        ),
+    }

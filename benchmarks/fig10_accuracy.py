@@ -1,0 +1,31 @@
+"""Fig. 10 — QA1/QA2 accuracy vs N per approach (synthetic).
+
+The reproduction target: AnotherMe == 100% on both metrics at every N;
+MinHash/BRP degrade (BRP worst)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, approaches, centralized_truth
+from repro.core import AnotherMeConfig, qa1, qa2, run_anotherme
+from repro.data import synthetic_setup
+
+GRID_QUICK = (300, 600)
+GRID_FULL = (1_000, 2_000)
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    for n in (GRID_FULL if full else GRID_QUICK):
+        batch, forest = synthetic_setup(
+            n, num_types=10, classes_per_type=5, num_places=500, seed=0
+        )
+        cen_pairs, cen_comms = centralized_truth(batch, forest)
+        for name, cand in approaches(forest).items():
+            res = run_anotherme(
+                batch, forest, AnotherMeConfig(), candidate_fn=cand
+            )
+            rows.append(Row(
+                f"fig10/{name}/N={n}", 0.0,
+                f"QA1={qa1(res.communities, cen_comms):.3f};"
+                f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}",
+            ))
+    return rows

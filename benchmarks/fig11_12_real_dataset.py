@@ -1,0 +1,52 @@
+"""Figs. 11-12 — processing time + accuracy on the real dataset (GeoLife
+surrogate, 182 users / 17,621 trajectories at full scale).  BRP excluded as
+in the paper ('not able to correctly detect most communities')."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, centralized_truth, timeit
+from repro.core import (
+    AnotherMeConfig, minhash_candidates, qa1, qa2, run_anotherme, type_codes,
+    udf_pipeline,
+)
+from repro.data import geolife_surrogate
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    if full:
+        batch, forest = geolife_surrogate(num_users=182, num_traj=17_621, seed=0)
+    else:
+        batch, forest = geolife_surrogate(num_users=60, num_traj=1_200, seed=0)
+    rho = 3.0
+    cfg = AnotherMeConfig(rho=rho)
+    small_enough_for_truth = batch.places.shape[0] <= 3_000
+    if small_enough_for_truth:
+        cen_pairs, cen_comms = centralized_truth(batch, forest, rho=rho)
+
+    t, res = timeit(lambda: run_anotherme(batch, forest, cfg))
+    d = ""
+    if small_enough_for_truth:
+        d = (f"QA1={qa1(res.communities, cen_comms):.3f};"
+             f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}")
+    rows.append(Row("fig11/anotherme", t * 1e6, d))
+
+    t, res_mh = timeit(lambda: run_anotherme(
+        batch, forest, cfg,
+        candidate_fn=lambda e, b: minhash_candidates(
+            type_codes(e), b.lengths, num_perm=16, bands=4,
+            pair_capacity=1 << 22),
+    ))
+    d = ""
+    if small_enough_for_truth:
+        d = (f"QA1={qa1(res_mh.communities, cen_comms):.3f};"
+             f"QA2={qa2(res_mh.similar_pairs, cen_pairs):.3f}")
+    rows.append(Row("fig11/minhash", t * 1e6, d))
+
+    if small_enough_for_truth:
+        t, _ = timeit(lambda: udf_pipeline(
+            np.asarray(batch.places), np.asarray(batch.lengths), forest,
+            rho=rho))
+        rows.append(Row("fig11/udf", t * 1e6, "QA1=1.000;QA2=1.000"))
+    return rows

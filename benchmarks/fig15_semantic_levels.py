@@ -1,0 +1,25 @@
+"""Fig. 15 — effect of the number of semantic levels (2..6) on accuracy
+(stays 100%) and processing time (grows with levels)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, centralized_truth, timeit
+from repro.core import AnotherMeConfig, qa1, qa2, run_anotherme
+from repro.data import synthetic_setup
+
+
+def run(full: bool = False) -> list[Row]:
+    n = 1_000 if full else 300
+    rows = []
+    for n_levels in (2, 3, 4, 5, 6):
+        batch, forest = synthetic_setup(
+            n, num_types=10, classes_per_type=5, num_places=400,
+            n_levels=n_levels, seed=0,
+        )
+        cen_pairs, cen_comms = centralized_truth(batch, forest)
+        t, res = timeit(lambda: run_anotherme(batch, forest, AnotherMeConfig()))
+        rows.append(Row(
+            f"fig15/anotherme/levels={n_levels}", t * 1e6,
+            f"QA1={qa1(res.communities, cen_comms):.3f};"
+            f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}",
+        ))
+    return rows

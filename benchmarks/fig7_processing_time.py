@@ -1,0 +1,48 @@
+"""Fig. 7 — overall processing time vs number of trajectories, all five
+approaches (Centralized, MinHash, BRP, User-defined, AnotherMe).
+
+The paper sweeps 10k..60k on a Xeon cluster; on this single CPU core we
+sweep a scaled grid (the asymptotics, not the constants, are the claim:
+Centralized/UDF grow ~quadratically, hash-based approaches stay near-linear,
+and UDF falls behind Centralized as N grows).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, approaches, timeit
+from repro.core import AnotherMeConfig, run_anotherme, udf_pipeline
+from repro.core.centralized import centralized_similar_pairs
+from repro.core.encoding import encode_batch, forest_tables
+from repro.data import synthetic_setup
+
+GRID_QUICK = (500, 1000, 2000)
+GRID_FULL = (2_000, 5_000, 10_000, 20_000)
+CENTRAL_CAP = 2_500   # beyond this the quadratic baselines need minutes
+UDF_CAP = 1_500
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    grid = GRID_FULL if full else GRID_QUICK
+    for n in grid:
+        batch, forest = synthetic_setup(n, seed=0)
+        cfg = AnotherMeConfig(community_mode="components")
+        t, res = timeit(lambda: run_anotherme(batch, forest, cfg))
+        rows.append(Row(f"fig7/anotherme/N={n}", t * 1e6,
+                        f"similar={len(res.similar_pairs)}"))
+        for name, cand in approaches(forest).items():
+            if cand is None:
+                continue
+            t, r2 = timeit(lambda: run_anotherme(batch, forest, cfg, candidate_fn=cand))
+            rows.append(Row(f"fig7/{name}/N={n}", t * 1e6,
+                            f"similar={len(r2.similar_pairs)}"))
+        if n <= CENTRAL_CAP:
+            enc = encode_batch(batch, forest_tables(forest))
+            t, _ = timeit(lambda: centralized_similar_pairs(enc, rho=2.0))
+            rows.append(Row(f"fig7/centralized/N={n}", t * 1e6, ""))
+        if n <= UDF_CAP:
+            t, _ = timeit(lambda: udf_pipeline(
+                np.asarray(batch.places), np.asarray(batch.lengths), forest))
+            rows.append(Row(f"fig7/udf/N={n}", t * 1e6, ""))
+    return rows

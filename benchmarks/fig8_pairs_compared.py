@@ -1,0 +1,33 @@
+"""Fig. 8 — number of trajectory pairs actually compared per approach.
+
+Centralized = C(N,2); hash approaches compare only their candidate sets.
+MinHash/BRP 'look faster' partly because they find FEWER candidates — the
+paper's point that speed without the accuracy column is misleading.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, approaches
+from repro.core import AnotherMeConfig, run_anotherme
+from repro.data import synthetic_setup
+
+GRID_QUICK = (500, 1000, 2000)
+GRID_FULL = (2_000, 5_000, 10_000, 20_000)
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    for n in (GRID_FULL if full else GRID_QUICK):
+        batch, forest = synthetic_setup(n, seed=0)
+        cfg = AnotherMeConfig(community_mode="components")
+        rows.append(Row(f"fig8/centralized/N={n}", 0.0,
+                        f"pairs={n*(n-1)//2}"))
+        res = run_anotherme(batch, forest, cfg)
+        rows.append(Row(f"fig8/anotherme/N={n}", 0.0,
+                        f"pairs={res.stats['num_candidates']}"))
+        for name, cand in approaches(forest).items():
+            if cand is None:
+                continue
+            r2 = run_anotherme(batch, forest, cfg, candidate_fn=cand)
+            rows.append(Row(f"fig8/{name}/N={n}", 0.0,
+                            f"pairs={r2.stats['num_candidates']}"))
+    return rows

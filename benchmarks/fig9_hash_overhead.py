@@ -1,0 +1,55 @@
+"""Fig. 9 — time taken by the hash function itself per approach, plus the
+paper's collision-rate model C(L,k)/Q^k validated empirically."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import (
+    encode_batch, forest_tables, minhash_signatures, type_codes,
+)
+from repro.core.brp import brp_bucket_keys
+from repro.core.shingling import expected_collision_rate, shingles_from_types
+from repro.core.types import PAD_KEY
+from repro.data import synthetic_setup
+
+GRID_QUICK = (1000, 2000)
+GRID_FULL = (10_000, 50_000, 100_000)
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    for n in (GRID_FULL if full else GRID_QUICK):
+        batch, forest = synthetic_setup(n, seed=0)
+        enc = encode_batch(batch, forest_tables(forest))
+        tc = type_codes(enc)
+
+        t, keys = timeit(
+            lambda: shingles_from_types(
+                tc, batch.lengths, k=3, num_types=forest.num_types
+            ).block_until_ready()
+        )
+        rows.append(Row(f"fig9/ssh/N={n}", t * 1e6, ""))
+        t, _ = timeit(
+            lambda: minhash_signatures(tc, batch.lengths, num_perm=16)
+            .block_until_ready()
+        )
+        rows.append(Row(f"fig9/minhash/N={n}", t * 1e6, ""))
+        t, _ = timeit(
+            lambda: brp_bucket_keys(
+                tc, batch.lengths, num_types=forest.num_types
+            ).block_until_ready()
+        )
+        rows.append(Row(f"fig9/brp/N={n}", t * 1e6, ""))
+
+        # collision-rate model (section IV.2)
+        k_np = np.asarray(keys)
+        valid = k_np[k_np != PAD_KEY]
+        shingles_per_traj = (k_np != PAD_KEY).sum(axis=1).mean()
+        model = expected_collision_rate(7, 3, forest.num_types)
+        rows.append(Row(
+            f"fig9/collision_model/N={n}", 0.0,
+            f"model={model:.2e};shingles_per_traj={shingles_per_traj:.1f};"
+            f"distinct_keys={len(np.unique(valid))}",
+        ))
+    return rows

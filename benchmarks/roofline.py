@@ -1,0 +1,82 @@
+"""Roofline summary: reads experiments/dryrun.json (produced by
+launch/dryrun.py) and emits the per-(arch x shape x mesh) table for
+EXPERIMENTS.md §Roofline, plus a validation row comparing HLO flops against
+the analytic 6*N*D model."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import Row
+
+
+def load(path="experiments/dryrun.json"):
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    return json.loads(p.read_text())
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    recs = load()
+    if not recs:
+        return [Row("roofline/missing", 0.0,
+                    "run: python -m repro.launch.dryrun first")]
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(Row(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", -1.0,
+                str(r.get("status"))[:80],
+            ))
+            continue
+        mem = r.get("memory", {})
+        if "roofline" not in r:
+            rows.append(Row(
+                f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+                r.get("compile_s", 0) * 1e6,
+                f"bytes_per_dev={mem.get('peak_bytes_est', 0):.3e}",
+            ))
+            continue
+        rf = r["roofline"]
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            rf["step_time_bound_s"] * 1e6,
+            f"dom={rf['dominant']};compute={rf['compute_s']:.3g}s;"
+            f"memory={rf['memory_s']:.3g}s;coll={rf['collective_s']:.3g}s;"
+            f"mfu_bound={rf['mfu_bound']:.3f};"
+            f"useful={rf['useful_flops_ratio']:.2f};"
+            f"mem_per_dev={mem.get('peak_bytes_est', 0):.3e}",
+        ))
+    return rows
+
+
+def summarize(path="experiments/dryrun.json"):
+    """Human-readable table (used to draft EXPERIMENTS.md)."""
+    recs = [r for r in load(path) if r.get("status") == "ok"]
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'dom':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'MFU@bound':>9s} {'useful':>7s} {'mem/dev':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        rf = r.get("roofline")
+        mem = r.get("memory", {}).get("peak_bytes_est", 0)
+        if rf is None:
+            lines.append(
+                f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                f"{'(multi-pod)':10s} {'-':>10s} {'-':>10s} {'-':>10s} "
+                f"{'-':>9s} {'-':>7s} {mem/1e9:8.2f}G"
+            )
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{rf['dominant']:10s} {rf['compute_s']:10.4f} "
+            f"{rf['memory_s']:10.4f} {rf['collective_s']:10.4f} "
+            f"{rf['mfu_bound']:9.4f} {rf['useful_flops_ratio']:7.2f} "
+            f"{mem/1e9:8.2f}G"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summarize())

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default sizes are CPU-quick;
+``--full`` runs the paper-scale grids (minutes to hours).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "fig7_processing_time",
+    "fig8_pairs_compared",
+    "fig9_hash_overhead",
+    "fig10_accuracy",
+    "fig11_12_real_dataset",
+    "fig13_scalability_data",
+    "fig14_scalability_nodes",
+    "fig15_semantic_levels",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if args.only and not any(s in modname for s in args.only.split(",")):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+            for row in mod.run(full=args.full):
+                print(row.csv(), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{modname},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Serving example: batched prefill + greedy decode with per-family caches
+(GQA KV / MLA latent / SSM state), on reduced configs of three assigned
+architectures.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.model import init_params
+from repro.serve.kvcache import cache_bytes
+from repro.serve.serve_step import make_decode_step, prefill_with_cache
+
+
+def serve(arch: str, *, batch=4, prompt_len=12, gen_len=16, max_len=64):
+    cfg = get_config(arch).reduced()
+    if cfg.frontend != "none":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, frontend="none")
+    mesh = make_smoke_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32
+    )
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_with_cache(params, prompts, cfg, mesh, max_len)
+    next_tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    t_prefill = time.perf_counter() - t0
+
+    dstep = jax.jit(make_decode_step(cfg, mesh))
+    out_tokens = [next_tok]
+    t0 = time.perf_counter()
+    for _ in range(gen_len - 1):
+        logits, cache = dstep(params, cache, next_tok)
+        next_tok = jnp.argmax(
+            logits[:, :, : cfg.vocab_size], axis=-1
+        ).astype(jnp.int32)
+        out_tokens.append(next_tok)
+    jax.block_until_ready(next_tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"{arch:22s} family={cfg.family:7s} "
+          f"cache={cache_bytes(cfg, batch, max_len)/1e6:7.2f}MB  "
+          f"prefill={t_prefill*1e3:7.1f}ms  "
+          f"decode={t_decode/max(gen_len-1,1)*1e3:6.1f}ms/tok  "
+          f"sample={gen[0, :8].tolist()}")
+    assert gen.shape == (batch, gen_len)
+    assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+
+
+def main():
+    print("batched serving across cache families (reduced configs):")
+    for arch in ("granite-3-8b", "deepseek-v2-236b", "mamba2-1.3b",
+                 "zamba2-2.7b"):
+        serve(arch)
+    print("all families served ✓")
+
+
+if __name__ == "__main__":
+    main()

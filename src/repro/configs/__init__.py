@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+from repro.configs.registry import get_config, all_archs

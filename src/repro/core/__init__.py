@@ -1,0 +1,35 @@
+"""AnotherMe: large-scale semantic trajectory analysis (the paper's core).
+
+Public API:
+    SemanticForest / make_random_forest / encode_batch     (phase i)
+    shingles_from_types / ssh_candidates                   (phase ii)
+    multi_level_lcs / mss_scores / score_pairs             (phase iii)
+    maximal_cliques / connected_components / qa1 / qa2     (phase iv)
+    run_anotherme / AnotherMeConfig                        (end-to-end)
+    baselines: centralized_similar_pairs, minhash_candidates,
+               brp_candidates, udf_pipeline
+"""
+from repro.core.types import (
+    TrajectoryBatch, EncodedBatch, CandidatePairs, ScoredPairs,
+    PAD_PLACE, PAD_KEY, PAD_ID,
+)
+from repro.core.encoding import (
+    SemanticForest, make_random_forest, forest_tables, encode_batch, type_codes,
+)
+from repro.core.shingling import (
+    shingles_from_types, shingle_indices, num_shingles, expected_collision_rate,
+)
+from repro.core.similarity import (
+    lcs_ref, lcs_wavefront, multi_level_lcs, mss_scores, score_pairs,
+    default_betas,
+)
+from repro.core.ssh import ssh_candidates, dedup_pairs, exact_pair_count
+from repro.core.communities import (
+    connected_components, components_as_sets, maximal_cliques,
+    pairs_to_set, qa1, qa2,
+)
+from repro.core.pipeline import AnotherMeConfig, AnotherMeResult, run_anotherme
+from repro.core.centralized import centralized_similar_pairs
+from repro.core.minhash import minhash_candidates, minhash_signatures
+from repro.core.brp import brp_candidates
+from repro.core.udf import udf_pipeline

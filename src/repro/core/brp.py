@@ -1,0 +1,76 @@
+"""Bucketed Random Projection baseline (Spark's BRP LSH; paper section V.1).
+
+Each trajectory's type-level **count vector** (bag of types) is projected
+onto random unit vectors; the bucket index floor(proj / bucket_length) is
+the hash key.  Like MinHash this discards visiting order entirely and, with
+coarse buckets, even most frequency information — the paper observes BRP
+"missing almost all the correct communities" (Fig. 10), which we reproduce.
+
+The banded bucket keys feed the same sort-merge join as SSH/MinHash.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ssh import ssh_candidates
+from repro.core.types import CandidatePairs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_types", "num_proj", "seed", "bucket_length")
+)
+def brp_bucket_keys(
+    type_codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    num_types: int,
+    num_proj: int = 4,
+    bucket_length: float = 2.0,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """int32 [N, num_proj] salted bucket keys of the type-count vectors."""
+    n, L = type_codes.shape
+    valid = jnp.arange(L, dtype=jnp.int32)[None, :] < lengths[:, None]
+    onehot = jax.nn.one_hot(
+        jnp.where(valid, type_codes, num_types), num_types + 1, dtype=jnp.float32
+    )[..., :num_types]
+    counts = onehot.sum(axis=1)  # [N, Q]
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=(num_types, num_proj)).astype(np.float32)
+    r /= np.linalg.norm(r, axis=0, keepdims=True)
+    proj = counts @ jnp.asarray(r)  # [N, num_proj]
+    bucket = jnp.floor(proj / bucket_length).astype(jnp.int32)
+    # AND-composition (Spark semantics): one composite key per hash table —
+    # a candidate must fall in the same bucket for EVERY projection.  This is
+    # what makes BRP so lossy on order-sensitive similarity (paper Fig. 10).
+    space = 1 << 16
+    bucket = jnp.clip(bucket, -(space // 2), space // 2 - 1) + space // 2
+    key = jnp.zeros((bucket.shape[0],), jnp.int32)
+    for i in range(num_proj):
+        key = (key * 1_000_003 + bucket[:, i]) % ((1 << 31) - 1)
+    return jnp.abs(key)[:, None]
+
+
+def brp_candidates(
+    type_codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    num_types: int,
+    num_proj: int = 4,
+    bucket_length: float = 2.0,
+    pair_capacity: int,
+    seed: int = 0,
+) -> CandidatePairs:
+    keys = brp_bucket_keys(
+        type_codes,
+        lengths,
+        num_types=num_types,
+        num_proj=num_proj,
+        bucket_length=bucket_length,
+        seed=seed,
+    )
+    return ssh_candidates(keys, pair_capacity=pair_capacity)

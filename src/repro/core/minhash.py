@@ -1,0 +1,117 @@
+"""MinHashLSH baseline (Spark's built-in hash, reproduced; paper section V.1).
+
+Faithful to the paper's description: each trajectory is encoded at the type
+level into a **binary presence vector** (order and repetition are discarded —
+this is exactly the information loss that costs MinHash its accuracy in
+Figs. 10/12), minhash signatures are computed with universal hashing
+h_i(x) = (a_i * x + b_i) mod p, and banding groups trajectories whose band
+signatures collide.  Candidate pairs are then scored with the same MSS
+(Definition 4), mirroring the paper's experimental protocol.
+
+The banded join reuses the same sort-merge join machinery as SSH
+(core/ssh.py), so the accuracy comparison is apples-to-apples: both hashes
+pay the same join cost, only the hash differs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ssh import ssh_candidates
+from repro.core.types import CandidatePairs, PAD_KEY
+
+_MERSENNE = (1 << 31) - 1
+
+
+def _hash_params(num_perm: int, seed: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, _MERSENNE, size=num_perm, dtype=np.int64)
+    b = rng.integers(0, _MERSENNE, size=num_perm, dtype=np.int64)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+@functools.partial(jax.jit, static_argnames=("num_perm", "seed"))
+def minhash_signatures(
+    type_codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    num_perm: int = 16,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """Minhash signatures of the type-level presence *sets*.
+
+    type_codes int32 [N, L] -> int32 [N, num_perm].
+    Computed in int64-free fashion: (a*x + b) mod p with p = 2^31-1 done in
+    float64-free integer math via jnp.uint64 emulation is unnecessary here —
+    a*x fits in 62 bits, so we use jnp.int64 only if enabled, else split-mod
+    in int32.  For portability we use the split 16-bit trick.
+    """
+    n, L = type_codes.shape
+    a, b = _hash_params(num_perm, seed)
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    x = type_codes.astype(jnp.int32)
+    valid = jnp.arange(L, dtype=jnp.int32)[None, :] < lengths[:, None]
+
+    # (a * x + b) mod p with p = 2^31 - 1, computed via 16-bit limb split so
+    # everything stays in int32:  a*x = (a_hi*x)<<16 + a_lo*x, and
+    # 2^16 mod p handled by folding ((v mod p) * 2^16) mod p.
+    def mod_p(v):  # v in [0, 2^31-1 + something small) after folds
+        return jnp.where(v >= _MERSENNE, v - _MERSENNE, v)
+
+    def affine(ai_hi, ai_lo, bi, xv):
+        lo = (ai_lo * xv) % _MERSENNE
+        hi = (ai_hi * xv) % _MERSENNE
+        # hi * 2^16 mod p, done in two 8-bit shifts to stay in range
+        hi = (hi * 256) % _MERSENNE
+        hi = (hi * 256) % _MERSENNE
+        return mod_p(mod_p(lo + hi) + bi)
+
+    a_hi = (a32 >> 16).astype(jnp.int32)
+    a_lo = (a32 & 0xFFFF).astype(jnp.int32)
+    sig = []
+    for i in range(num_perm):
+        h = affine(a_hi[i], a_lo[i], b32[i], x)  # [N, L]
+        h = jnp.where(valid, h, jnp.iinfo(jnp.int32).max)
+        sig.append(jnp.min(h, axis=1))
+    return jnp.stack(sig, axis=1)
+
+
+def minhash_band_keys(
+    signatures: jnp.ndarray, *, bands: int, key_space: int | None = None
+) -> jnp.ndarray:
+    """LSH banding: hash each band of the signature into one int32 key.
+
+    Bands are salted so keys from different bands never collide; output
+    int32 [N, bands] plugs directly into ssh_candidates' sort-merge join.
+    """
+    n, num_perm = signatures.shape
+    assert num_perm % bands == 0, "num_perm must be divisible by bands"
+    if key_space is None:
+        key_space = (2**31 - 2) // bands  # salted keys stay within int32
+    rows = num_perm // bands
+    sig = signatures.reshape(n, bands, rows)
+    key = jnp.zeros((n, bands), jnp.int32)
+    for r in range(rows):
+        key = (key * 1_000_003 + sig[:, :, r]) % key_space
+    key = jnp.abs(key) + jnp.arange(bands, dtype=jnp.int32)[None, :] * key_space
+    # salt keeps band-b keys in [b*key_space, (b+1)*key_space) c [0, 2^31-2]
+    assert bands * key_space < 2**31
+    return key
+
+
+def minhash_candidates(
+    type_codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    num_perm: int = 16,
+    bands: int = 4,
+    pair_capacity: int,
+    seed: int = 0,
+) -> CandidatePairs:
+    sig = minhash_signatures(type_codes, lengths, num_perm=num_perm, seed=seed)
+    keys = minhash_band_keys(sig, bands=bands)
+    return ssh_candidates(keys, pair_capacity=pair_capacity)

@@ -1,0 +1,176 @@
+"""Phase (iii): multi-level semantic trajectory similarity (Definitions 2,4,5).
+
+``|M_h|`` is the length of the longest common subsequence (LCS) of the two
+trajectories' level-h encodings — repetition-aware, unlike set-based prior
+work (paper section IV.3).  ``MSS = sum_h beta_h * |M_h|``.
+
+Two implementations of the batched LCS:
+
+* ``lcs_ref``      — textbook row DP via nested ``lax.scan`` (the oracle;
+                     O(La*Lb) sequential steps, used in tests only).
+* ``lcs_wavefront``— anti-diagonal wavefront: 2L-1 vectorized steps keeping
+                     two rolling diagonals.  This is the TPU-native rewrite
+                     of the paper's CPU DP (see DESIGN.md) and the jnp
+                     fallback for the Pallas kernel in kernels/lcs.
+
+Padding convention: pad side A with PAD_CODE_A (-1) and side B with
+PAD_CODE_B (-2); padded tails never match so LCS(full padded) == LCS(true
+prefixes).  Callers gathering both sides from the same EncodedBatch must
+re-pad one side (see ``repad``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
+
+
+def repad(codes: jnp.ndarray, lengths: jnp.ndarray, pad_code: int) -> jnp.ndarray:
+    """Set padded positions (>= length) of [..., L] codes to ``pad_code``."""
+    L = codes.shape[-1]
+    pos = jnp.arange(L, dtype=jnp.int32)
+    mask = pos[None, :] < jnp.reshape(lengths, (-1, 1))
+    mask = mask.reshape(lengths.shape + (L,))
+    # broadcast mask over any intermediate dims (e.g. levels)
+    while mask.ndim < codes.ndim:
+        mask = mask[..., None, :]
+    return jnp.where(mask, codes, pad_code)
+
+
+def lcs_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle LCS, batched: a [B, La], b [B, Lb] -> int32 [B].
+
+    Classic row-major DP; rows via lax.scan, columns via inner lax.scan.
+    """
+    B, La = a.shape
+    Lb = b.shape[1]
+
+    def row_step(prev_row, ai):  # prev_row [B, Lb+1], ai [B]
+        def col_step(left, inputs):
+            up, diag, bj = inputs  # each [B]
+            match = (ai == bj) & (ai >= 0)
+            val = jnp.where(match, diag + 1, jnp.maximum(up, left))
+            return val, val
+
+        ups = prev_row[:, 1:]      # dp[i-1, j]     j=1..Lb  -> [B, Lb]
+        diags = prev_row[:, :-1]   # dp[i-1, j-1]
+        _, cols = jax.lax.scan(
+            col_step,
+            jnp.zeros((B,), jnp.int32),
+            (ups.T, diags.T, b.T),
+        )
+        new_row = jnp.concatenate([jnp.zeros((B, 1), jnp.int32), cols.T], axis=1)
+        return new_row, None
+
+    row0 = jnp.zeros((B, Lb + 1), jnp.int32)
+    final, _ = jax.lax.scan(row_step, row0, a.T)
+    return final[:, -1]
+
+
+@jax.jit
+def lcs_wavefront(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Anti-diagonal wavefront LCS, batched: a [B, La], b [B, Lb] -> int32 [B].
+
+    dp[i, j] laid out along diagonals t = i + j; diagonal t stored as
+    d_t[i] = dp[i, t - i] over the full i range [0, La] (out-of-range j
+    entries are never read by valid cells — see DESIGN.md).  2 rolling
+    diagonals, La + Lb - 1 steps of pure vector ops.
+
+    The diagonals are carried in int8 (LCS values <= L < 127; §Perf
+    anotherme/v2: the scan carry crosses fusion/HBM boundaries every step,
+    so carry width sets the memory term); REPRO_LCS_DTYPE=int32 restores
+    the baseline for A/B probes.
+    """
+    import os
+
+    cdt = jnp.int32 if os.environ.get("REPRO_LCS_DTYPE") == "int32" else jnp.int8
+    B, La = a.shape
+    Lb = b.shape[1]
+    assert La < 127 and Lb < 127
+
+    def step(carry, t):
+        d_prev2, d_prev1 = carry  # [B, La+1] each: diagonals t-2, t-1
+        i = jnp.arange(La + 1, dtype=jnp.int32)  # dp row index
+        j = t - i
+        # shifted views: x[i-1] with x[-1] := 0
+        shift = lambda d: jnp.concatenate(
+            [jnp.zeros((B, 1), cdt), d[:, :-1]], axis=1
+        )
+        up = d_prev1            # dp[i, j-1]  (diag t-1, same i)
+        left = shift(d_prev1)   # dp[i-1, j]  (diag t-1, i-1)
+        diag = shift(d_prev2)   # dp[i-1, j-1] (diag t-2, i-1)
+        # match check: a[i-1] vs b[j-1]; clamp indices, mask validity
+        ai = a[:, jnp.clip(i - 1, 0, La - 1)]
+        bj = jnp.take_along_axis(
+            b, jnp.broadcast_to(jnp.clip(j - 1, 0, Lb - 1)[None, :], (B, La + 1)),
+            axis=1,
+        )
+        valid = (i >= 1) & (j >= 1) & (j <= Lb)
+        match = (ai == bj) & valid[None, :]
+        new = jnp.where(match, diag + jnp.ones((), cdt), jnp.maximum(up, left))
+        new = jnp.where(valid[None, :], new, jnp.zeros((), cdt))
+        return (d_prev1, new), None
+
+    d0 = jnp.zeros((B, La + 1), cdt)
+    (d_prev2, d_prev1), _ = jax.lax.scan(
+        step, (d0, d0), jnp.arange(2, La + Lb + 1, dtype=jnp.int32)
+    )
+    # final diagonal t = La + Lb holds dp[La, Lb] at i = La
+    return d_prev1[:, La].astype(jnp.int32)
+
+
+def multi_level_lcs(
+    codes_a: jnp.ndarray,
+    len_a: jnp.ndarray,
+    codes_b: jnp.ndarray,
+    len_b: jnp.ndarray,
+    *,
+    impl=None,
+) -> jnp.ndarray:
+    """|M_h| for every level: [P, n_levels, L] x2 -> int32 [P, n_levels].
+
+    Levels are folded into the batch dimension — the LCS recurrence is
+    level-independent, so one batched kernel invocation covers all levels.
+    """
+    if impl is None:
+        impl = lcs_wavefront
+    P, H, L = codes_a.shape
+    a = repad(codes_a, len_a, PAD_CODE_A).reshape(P * H, L)
+    b = repad(codes_b, len_b, PAD_CODE_B).reshape(P * H, L)
+    return impl(a, b).reshape(P, H)
+
+
+def mss_scores(level_lcs: jnp.ndarray, betas: jnp.ndarray) -> jnp.ndarray:
+    """MSS = sum_h beta_h * |M_h| (Definition 4). level_lcs [P, H] -> [P]."""
+    return jnp.einsum("ph,h->p", level_lcs.astype(jnp.float32), betas)
+
+
+def default_betas(n_levels: int) -> jnp.ndarray:
+    """Paper default: equal weights 1/n (section V.1)."""
+    return jnp.full((n_levels,), 1.0 / n_levels, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("impl_name",))
+def score_pairs(
+    codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    left: jnp.ndarray,
+    right: jnp.ndarray,
+    betas: jnp.ndarray,
+    impl_name: str = "wavefront",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather + score candidate pairs against the encoded table.
+
+    codes [N, H, L], lengths [N], left/right [P] -> (level_lcs [P, H], mss [P]).
+    Invalid slots (PAD_ID) are clamped to row 0; callers mask by pair validity.
+    """
+    from repro.core.types import PAD_ID
+
+    impl = {"wavefront": lcs_wavefront, "ref": lcs_ref}[impl_name]
+    li = jnp.where(left == PAD_ID, 0, left)
+    ri = jnp.where(right == PAD_ID, 0, right)
+    lv = multi_level_lcs(codes[li], lengths[li], codes[ri], lengths[ri], impl=impl)
+    return lv, mss_scores(lv, betas)

@@ -1,0 +1,118 @@
+"""Phase (ii) part 2: the SSH candidate join (paper Algorithm 2, Fig. 5).
+
+Spark pipeline:  D3 --explode--> D4 --self-join on shingle--> D5 (pairs).
+TPU pipeline:    sort-merge join — one ``lax.sort`` by shingle key, then
+*exact compact* pair enumeration over equal-key runs:
+
+  each sorted row r with in-run rank k contributes exactly k pairs (with the
+  k earlier members of its run).  An exclusive cumsum of ranks assigns every
+  pair a unique output slot; a vectorized ``searchsorted`` inverts slot ->
+  (row, partner).  Total work O(R log R + P), zero data-dependent shapes,
+  zero wasted slots — the static-shape analogue of Spark's shuffle join.
+
+Pairs appearing under multiple shingles are deduplicated with a second sort
+on the canonical (lo, hi) key, honouring the paper's "each pair is scored
+exactly once no matter how many shingles it shares" (section IV.3).
+
+Capacity discipline: the pair buffer is a static ``pair_capacity``; if the
+true pair count exceeds it we report ``overflow`` and the host-level driver
+(pipeline.py) retries with doubled capacity — Spark's dynamic memory traded
+for deterministic compilable shapes (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CandidatePairs, PAD_ID, PAD_KEY
+
+
+def _runs(sorted_keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (rank within equal-key run, validity) for ascending keys."""
+    r = sorted_keys.shape[0]
+    idx = jnp.arange(r, dtype=jnp.int32)
+    start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    run_start = jax.lax.cummax(jnp.where(start, idx, -1))
+    rank = idx - run_start
+    return rank, sorted_keys != PAD_KEY
+
+
+def pairs_from_rows(
+    keys: jnp.ndarray, ids: jnp.ndarray, *, pair_capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exact-compact pair enumeration over flat (key, id) rows.
+
+    Returns (lo [P_cap], hi [P_cap], overflow) — canonical but NOT deduped
+    (the same pair may appear under several shared shingles).  Shared by the
+    single-device join and the distributed post-shuffle local join.
+    """
+    keys, ids = jax.lax.sort((keys, ids), num_keys=1)
+    rank, valid = _runs(keys)
+    contrib = jnp.where(valid, rank, 0)
+    excl = jnp.cumsum(contrib) - contrib  # exclusive prefix
+    total = excl[-1] + contrib[-1]
+
+    p = jnp.arange(pair_capacity, dtype=jnp.int32)
+    row = jnp.searchsorted(excl, p, side="right").astype(jnp.int32) - 1
+    row = jnp.clip(row, 0, keys.shape[0] - 1)
+    t = p - excl[row]
+    partner = row - rank[row] + t
+    partner = jnp.clip(partner, 0, keys.shape[0] - 1)
+    ok = p < total
+    a = jnp.where(ok, ids[row], PAD_ID)
+    b = jnp.where(ok, ids[partner], PAD_ID)
+    overflow = jnp.maximum(total - pair_capacity, 0)
+    return jnp.minimum(a, b), jnp.maximum(a, b), overflow
+
+
+@functools.partial(jax.jit, static_argnames=("pair_capacity",))
+def ssh_candidates(
+    shingle_keys: jnp.ndarray,
+    *,
+    pair_capacity: int,
+    id_offset: jnp.ndarray | int = 0,
+) -> CandidatePairs:
+    """Candidate pairs from per-trajectory shingle keys.
+
+    shingle_keys: int32 [N, S], PAD_KEY-padded, distinct per row.
+    id_offset:    added to local row indices to form global trajectory ids
+                  (used by the distributed pipeline's shard-local phase).
+    returns CandidatePairs with canonical (left < right) deduplicated pairs.
+    """
+    n, s = shingle_keys.shape
+    keys = shingle_keys.reshape(-1)
+    ids = jnp.repeat(
+        jnp.arange(n, dtype=jnp.int32) + jnp.asarray(id_offset, jnp.int32), s
+    )
+    lo, hi, overflow = pairs_from_rows(keys, ids, pair_capacity=pair_capacity)
+    return dedup_pairs(lo, hi, overflow=overflow)
+
+
+@jax.jit
+def dedup_pairs(
+    lo: jnp.ndarray, hi: jnp.ndarray, overflow: jnp.ndarray | int = 0
+) -> CandidatePairs:
+    """Canonicalize + deduplicate pair lists (PAD_ID slots sort to the end)."""
+    lo, hi = jax.lax.sort((lo, hi), num_keys=2)
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (lo[1:] == lo[:-1]) & (hi[1:] == hi[:-1])]
+    )
+    bad = dup | (lo == hi) | (lo == PAD_ID)
+    lo = jnp.where(bad, PAD_ID, lo)
+    hi = jnp.where(bad, PAD_ID, hi)
+    lo, hi = jax.lax.sort((lo, hi), num_keys=2)  # compact valid slots to front
+    count = jnp.sum(lo != PAD_ID).astype(jnp.int32)
+    return CandidatePairs(
+        left=lo, right=hi, count=count, overflow=jnp.asarray(overflow, jnp.int32)
+    )
+
+
+def exact_pair_count(shingle_keys: jnp.ndarray) -> int:
+    """Host helper: the true (pre-dedup) join size, for capacity planning."""
+    keys = jnp.sort(shingle_keys.reshape(-1))
+    rank, valid = _runs(keys)
+    return int(jnp.sum(jnp.where(valid, rank, 0)))

@@ -1,0 +1,120 @@
+"""Core data types for the AnotherMe semantic-trajectory engine.
+
+All structures are fixed-shape, padded, and registered as pytrees so every
+phase of the pipeline is jit/shard_map compatible.  Padding conventions:
+
+* trajectories: place ids are int32 >= 0; padding slot = ``PAD_PLACE`` (-1).
+* shingle keys: valid keys are int32 in [0, Q**k); padding = ``PAD_KEY``
+  (INT32_MAX) so that an ascending sort pushes padding to the end and padding
+  never joins with a real key.
+* pair slots: invalid pair = (PAD_ID, PAD_ID) with PAD_ID = INT32_MAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PAD_PLACE = -1
+PAD_KEY = jnp.iinfo(jnp.int32).max
+PAD_ID = jnp.iinfo(jnp.int32).max
+
+
+def _pytree_dataclass(cls):
+    """Register a dataclass as a jax pytree (all fields are leaves)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return tuple(getattr(obj, name) for name in fields), None
+
+    def unflatten(_, children):
+        return cls(*children)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@_pytree_dataclass
+@dataclasses.dataclass
+class TrajectoryBatch:
+    """A batch of semantic trajectories (Definition 1 of the paper).
+
+    places:  int32 [N, L_max]  place (name-level) ids, PAD_PLACE-padded.
+             Repeated places encode stay duration (paper section IV.1).
+    lengths: int32 [N]         true number of places per trajectory.
+    user_id: int32 [N]         owning user (trajectory id == row index).
+    """
+
+    places: Any
+    lengths: Any
+    user_id: Any
+
+    @property
+    def num_trajectories(self) -> int:
+        return self.places.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.places.shape[1]
+
+    def valid_mask(self) -> jnp.ndarray:
+        pos = jnp.arange(self.max_len, dtype=jnp.int32)[None, :]
+        return pos < self.lengths[:, None]
+
+
+@_pytree_dataclass
+@dataclasses.dataclass
+class EncodedBatch:
+    """Multi-level semantic encodings of a TrajectoryBatch.
+
+    codes:   int32 [N, n_levels, L_max]  per-place code at each level.
+             Level 0 is the COARSEST ("type"), level n-1 the finest ("name").
+             Padded positions carry distinct negative sentinels per side so
+             padding never matches anything (see similarity.py).
+    lengths: int32 [N].
+    """
+
+    codes: Any
+    lengths: Any
+
+    @property
+    def num_levels(self) -> int:
+        return self.codes.shape[1]
+
+
+@_pytree_dataclass
+@dataclasses.dataclass
+class CandidatePairs:
+    """Output of the SSH join: candidate similar pairs, exactly-once.
+
+    left/right: int32 [P_cap]  trajectory ids, PAD_ID in unused slots.
+    count:      int32 []       number of valid pairs.
+    overflow:   int32 []       pairs dropped because P_cap was too small
+                               (the host retries with doubled capacity).
+    """
+
+    left: Any
+    right: Any
+    count: Any
+    overflow: Any
+
+    def valid_mask(self) -> jnp.ndarray:
+        return self.left != PAD_ID
+
+
+@_pytree_dataclass
+@dataclasses.dataclass
+class ScoredPairs:
+    """Candidate pairs with multi-level similarity scores (Definition 4)."""
+
+    left: Any
+    right: Any
+    level_lcs: Any  # int32 [P_cap, n_levels]  |M_h| per level
+    mss: Any        # float32 [P_cap]          sum_h beta_h * |M_h|
+    count: Any
+    overflow: Any
+
+    def valid_mask(self) -> jnp.ndarray:
+        return self.left != PAD_ID

@@ -1,0 +1,2 @@
+from repro.data.synthetic import synthetic_trajectories, synthetic_setup
+from repro.data.geolife import geolife_surrogate

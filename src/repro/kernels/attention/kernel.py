@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash attention (fwd), causal + GQA.
+
+Grid (B*Hq, Sq/blk_q, Skv/blk_k); the kv axis is innermost and TPU grids
+execute sequentially, so the online-softmax state (m, l, acc) lives in VMEM
+scratch carried across kv steps; the output tile is emitted on the last kv
+step.  GQA is handled in the BlockSpec index maps: the kv block for query
+head h is h // (Hq // Hkv) — no materialized head replication.
+
+Block shapes: q [blk_q, D], k/v [blk_k, D] in VMEM; scores [blk_q, blk_k]
+f32 in VREGs.  Defaults blk_q = blk_k = 512, D <= 256: ~1.8 MB VMEM,
+MXU-aligned (multiples of 128 both dims).
+
+This kernel removes the score-matrix HBM round-trip that dominates the
+memory roofline term of every prefill/train cell in the XLA fallback
+(EXPERIMENTS.md §Perf): scores never leave VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, blk_q: int, blk_k: int, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # [blk_q, D]
+    k = k_ref[0]  # [blk_k, D]
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # [blk_q, blk_k]
+
+    if causal:
+        qi = pl.program_id(1)
+        q_pos = qi * blk_q + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 0
+        )
+        k_pos = ki * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 1
+        )
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rep", "batch", "causal", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,     # [BH, Sq, D]  (batch*q-heads leading)
+    k: jnp.ndarray,     # [BKH, Skv, D]
+    v: jnp.ndarray,
+    *,
+    rep: int,           # q-heads per kv-head (GQA)
+    batch: int,         # B (to invert the bh = b*Hq + h flattening)
+    causal: bool = True,
+    blk_q: int = 512,
+    blk_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Skv)
+    assert Sq % blk_q == 0 and Skv % blk_k == 0
+    n_k = Skv // blk_k
+    scale = 1.0 / math.sqrt(D)
+    grid = (BH, Sq // blk_q, n_k)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, blk_q=blk_q, blk_k=blk_k, n_k=n_k
+    )
+    # bh = b*Hq + h; the kv row for query head h is b*KH + h // rep
+    Hq = BH // batch
+    KH = k.shape[0] // batch
+
+    def kv_index(bh, qi, ki):
+        b = bh // Hq
+        h = bh % Hq
+        return (b * KH + h // rep, ki, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, blk_k, D), kv_index),
+            pl.BlockSpec((1, blk_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

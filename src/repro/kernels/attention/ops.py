@@ -1,0 +1,32 @@
+"""Public wrapper: [B,S,H,D] layout -> per-head kernel layout, interpret
+fallback off-TPU, and drop-in compatibility with models.layers'
+chunked_attention signature."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 512,
+                    blk_k: int = 512):
+    """q [B,Sq,H,D], k/v [B,Skv,KH,D] -> [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    _, Skv, KH, _ = k.shape
+    rep = H // KH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KH, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KH, Skv, D)
+    o = flash_attention_pallas(
+        qf, kf, vf, rep=rep, batch=B, causal=causal, blk_q=blk_q,
+        blk_k=blk_k, interpret=not _on_tpu(),
+    )
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: full-softmax attention with GQA and causal masking."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention(q, k, v, *, causal: bool = True):
+    """q [B,Sq,H,D], k/v [B,Skv,KH,D] -> [B,Sq,H,D] (f32 softmax)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    rep = H // KH
+    qg = q.reshape(B, Sq, KH, rep, D).astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

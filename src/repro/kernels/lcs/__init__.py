@@ -1,0 +1,1 @@
+from repro.kernels.lcs.ops import lcs

@@ -1,0 +1,38 @@
+"""Public jit'd wrapper for the batched LCS kernel.
+
+Pads the batch to the block size, dispatches to the Pallas kernel
+(interpret=True off-TPU so CPU tests execute the same kernel body), and
+falls back to the jnp wavefront for tiny batches where kernel launch
+overhead dominates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lcs.kernel import lcs_pallas
+from repro.core.similarity import lcs_wavefront
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lcs(a: jnp.ndarray, b: jnp.ndarray, *, block_b: int = 512) -> jnp.ndarray:
+    """Batched LCS: int32 [B, L] x2 -> int32 [B].
+
+    Inputs must be sentinel-padded (side A: -1, side B: -2) as produced by
+    repro.core.similarity.repad.
+    """
+    B, L = a.shape
+    if B < block_b and not _on_tpu():
+        return lcs_wavefront(a, b)
+    pad = (-B) % block_b
+    if pad:
+        a = jnp.concatenate([a, jnp.full((pad, L), -1, jnp.int32)])
+        b = jnp.concatenate([b, jnp.full((pad, L), -2, jnp.int32)])
+    out = lcs_pallas(a, b, block_b=block_b, interpret=not _on_tpu())
+    return out[:B]

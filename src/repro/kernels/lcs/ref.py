@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the LCS kernel: the textbook row DP."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.similarity import lcs_ref
+
+
+def lcs(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b int32 [B, L] (sentinel-padded) -> int32 [B]."""
+    return lcs_ref(a, b)

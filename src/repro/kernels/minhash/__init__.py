@@ -1,0 +1,1 @@
+from repro.kernels.minhash.ops import minhash_signatures

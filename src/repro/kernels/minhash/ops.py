@@ -1,0 +1,37 @@
+"""Public wrapper for the minhash signature kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.minhash import _hash_params
+from repro.kernels.minhash.kernel import minhash_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_perm", "seed", "block_b"))
+def minhash_signatures(
+    types: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    num_perm: int = 16,
+    seed: int = 0,
+    block_b: int = 512,
+) -> jnp.ndarray:
+    """int32 [N, L] + [N] -> int32 [N, num_perm] minhash signatures."""
+    N, L = types.shape
+    a, b = _hash_params(num_perm, seed)
+    ab = jnp.stack([a.astype(jnp.int32), b.astype(jnp.int32)], axis=1)
+    pad = (-N) % block_b
+    if pad:
+        types = jnp.concatenate([types, jnp.zeros((pad, L), jnp.int32)])
+        lengths = jnp.concatenate([lengths, jnp.zeros((pad,), jnp.int32)])
+    sig = minhash_pallas(
+        types, lengths, ab, block_b=block_b, interpret=not _on_tpu()
+    )
+    return sig[:N]

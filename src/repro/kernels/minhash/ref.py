@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the minhash kernel: core/minhash.py signatures."""
+from __future__ import annotations
+
+from repro.core.minhash import minhash_signatures as _sig
+
+
+def minhash_signatures(types, lengths, *, num_perm: int = 16, seed: int = 0):
+    return _sig(types, lengths, num_perm=num_perm, seed=seed)

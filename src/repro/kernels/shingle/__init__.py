@@ -1,0 +1,1 @@
+from repro.kernels.shingle.ops import shingle_keys

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: k-sequential shingle key generation.
+
+The paper's Algorithm 1 is a k-deep nested loop per trajectory — a gather on
+CPU.  The MXU-native rewrite: selecting the j-th member of every combination
+is a matmul with a static 0/1 selection matrix E_j [L, S] (E_j[l, s] = 1 iff
+combination s takes position l as its j-th element), so the whole shingle
+tensor is k small matmuls
+
+    c_j = types_f32 @ E_j          (exact in f32: codes < Q <= 2^24)
+
+followed by an integer base-Q pack key = ((c_0*Q)+c_1)*Q+c_2 on the VPU.
+This replaces an irregular gather with systolic-array work — the
+"rethink for the MXU" adaptation called out in DESIGN.md.
+
+Block shape: [TB, L] type codes + [TB, 1] lengths in VMEM; outputs
+[TB, S] keys.  The selection matrices are compile-time constants that the
+Mosaic compiler keeps in VMEM across grid steps.  VMEM footprint
+TB*(L + S)*4 + k*L*S*4 bytes — TB=256, L=16, S=560: ~2.8 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.shingling import shingle_indices
+from repro.core.types import PAD_KEY
+
+
+def _selection_matrices(L: int, k: int, S_pad: int) -> tuple[np.ndarray, np.ndarray]:
+    """E [k, L, S_pad] f32 one-hot selectors + last index per combo [S_pad]."""
+    idx = shingle_indices(L, k)  # [S, k]
+    S = idx.shape[0]
+    E = np.zeros((k, L, S_pad), np.float32)
+    for j in range(k):
+        E[j, idx[:, j], np.arange(S)] = 1.0
+    last = np.full((S_pad,), L + 1, np.int32)
+    last[:S] = idx[:, -1]
+    return E, last
+
+
+def _make_kernel(k: int, num_types: int):
+    def kernel(types_ref, len_ref, e_ref, last_ref, out_ref):
+        types = types_ref[...].astype(jnp.float32)  # [TB, L]
+        lengths = len_ref[...]  # [TB, 1]
+        key = jnp.zeros(out_ref.shape, jnp.int32)
+        for j in range(k):
+            cj = jax.lax.dot(
+                types, e_ref[j], precision=jax.lax.Precision.HIGHEST
+            )
+            key = key * num_types + cj.astype(jnp.int32)
+        valid = last_ref[...] < lengths  # [1, S] vs [TB, 1] -> [TB, S]
+        out_ref[...] = jnp.where(valid, key, PAD_KEY)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_types", "s_pad", "block_b", "interpret")
+)
+def shingle_pallas(
+    types: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    k: int,
+    num_types: int,
+    s_pad: int,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """types int32 [N, L], lengths int32 [N] -> keys int32 [N, s_pad]."""
+    N, L = types.shape
+    assert N % block_b == 0
+    E_np, last_np = _selection_matrices(L, k, s_pad)
+    kernel = _make_kernel(k, num_types)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((k, L, s_pad), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, s_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, s_pad), jnp.int32),
+        interpret=interpret,
+    )(types, lengths[:, None], jnp.asarray(E_np), jnp.asarray(last_np)[None, :])

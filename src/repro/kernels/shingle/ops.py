@@ -1,0 +1,55 @@
+"""Public wrapper: Pallas shingle keys + XLA-side dedup (sort + mask).
+
+The kernel produces the raw C(L,k) combination keys; the distinct-per-row
+set semantics (paper joins on DISTINCT shingles) are restored here with a
+row sort + duplicate masking, exactly as core/shingling.py does.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shingling import num_shingles
+from repro.core.types import PAD_KEY
+from repro.kernels.shingle.kernel import shingle_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_types", "block_b", "dedup")
+)
+def shingle_keys(
+    types: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    k: int,
+    num_types: int,
+    block_b: int = 256,
+    dedup: bool = True,
+) -> jnp.ndarray:
+    """int32 [N, L] types + [N] lengths -> int32 [N, S_pad] distinct keys."""
+    N, L = types.shape
+    s = num_shingles(L, k)
+    s_pad = -(-s // 128) * 128  # lane-aligned output width
+    pad = (-N) % block_b
+    if pad:
+        types = jnp.concatenate([types, jnp.zeros((pad, L), jnp.int32)])
+        lengths = jnp.concatenate([lengths, jnp.zeros((pad,), jnp.int32)])
+    keys = shingle_pallas(
+        types, lengths, k=k, num_types=num_types, s_pad=s_pad,
+        block_b=block_b, interpret=not _on_tpu(),
+    )[:N]
+    if dedup:
+        n = keys.shape[0]
+        keys = jnp.sort(keys, axis=-1)
+        dup = jnp.concatenate(
+            [jnp.zeros((n, 1), bool), keys[:, 1:] == keys[:, :-1]], axis=1
+        )
+        keys = jnp.where(dup, PAD_KEY, keys)
+        keys = jnp.sort(keys, axis=-1)
+    return keys

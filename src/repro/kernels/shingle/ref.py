@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: gather-based shingling (no dedup, no sort)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.shingling import shingles_from_types
+
+
+def shingle_keys(types, lengths, *, k: int, num_types: int) -> jnp.ndarray:
+    """Distinct-per-row semantics NOT applied: raw combination keys, sorted
+    ascending for comparability with the kernel output."""
+    keys = shingles_from_types(
+        types, lengths, k=k, num_types=num_types, dedup=False
+    )
+    return jnp.sort(keys, axis=-1)

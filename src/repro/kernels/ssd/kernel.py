@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block.
+
+Per grid cell (batch*chunk, head): the chunk-local quadratic —
+
+  scores[i,j] = (C_i . B_j)                     (MXU [Q,N]x[N,Q])
+  M[i,j]      = tril * scores * exp(cum_i-cum_j) * dt_j
+  y_intra     = M @ x                            (MXU [Q,Q]x[Q,P])
+  state       = x^T @ (B * exp(cum_last-cum_j) * dt_j)   ([P,Q]x[Q,N])
+  cdecay      = exp(cum_last)
+
+The decay/score matrices live only in VREGs/VMEM — the HBM traffic that
+dominates the zamba2/mamba2 memory roofline term in the XLA fallback
+(§Perf) never happens.  The inter-chunk associative scan (tiny [H,P,N]
+states) stays in XLA (ops.py), mirroring how the CUDA SSD splits work.
+
+B/C are per-GROUP (G=1 for the assigned archs): their BlockSpec index maps
+ignore the head index, so no H-fold replication is materialized.
+
+VMEM per cell: x [Q,P] + B/C [Q,N] + M [Q,Q] f32 ~ Q=128,P=64,N=128:
+~200 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, cum_ref, dt_ref, b_ref, c_ref, y_ref, st_ref, cd_ref):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    cum = cum_ref[0, :, 0:1].astype(jnp.float32)     # [Q, 1]
+    dt = dt_ref[0, :, 0:1].astype(jnp.float32)       # [Q, 1]
+    B_ = b_ref[0].astype(jnp.float32)                # [Q, N]
+    C_ = c_ref[0].astype(jnp.float32)                # [Q, N]
+    Q = x.shape[0]
+
+    scores = jax.lax.dot_general(
+        C_, B_, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q] = C_i . B_j
+    decay = jnp.exp(cum - cum.T)                     # exp(cum_i - cum_j)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    )
+    M = jnp.where(tri, scores * decay, 0.0) * dt.T
+    y = jax.lax.dot(M, x, preferred_element_type=jnp.float32)
+
+    last = cum[Q - 1 :, :]                           # [1, 1]
+    w = jnp.exp(last - cum) * dt                     # [Q, 1]
+    state = jax.lax.dot_general(
+        x, B_ * w, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [P, N]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = state
+    cd_ref[0, 0] = jnp.exp(last)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_pallas(x, cum, dt, B_, C_, *, interpret: bool = False):
+    """x [BC, Q, H, P], cum/dt [BC, Q, H], B_/C_ [BC, Q, N] (G=1 group)
+    -> (y [BC, Q, H, P] f32-accurate, state [BC, H, P, N] f32,
+        cdecay [BC, H, 1, 1] f32)."""
+    BC, Q, H, P = x.shape
+    N = B_.shape[-1]
+    grid = (BC, H)
+    y, st, cd = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bc, h: (bc, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bc, h: (bc, 0, h)),
+            pl.BlockSpec((1, Q, 1), lambda bc, h: (bc, 0, h)),
+            pl.BlockSpec((1, Q, N), lambda bc, h: (bc, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda bc, h: (bc, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bc, h: (bc, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda bc, h: (bc, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, Q, H, P), x.dtype),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, cum, dt, B_, C_)
+    return y, st, cd

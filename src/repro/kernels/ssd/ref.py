@@ -1,0 +1,6 @@
+"""Pure-jnp oracle: the chunked SSD from models/mamba.py."""
+from repro.models.mamba import _ssd_chunked
+
+
+def ssd_chunked(x, dt, A, B_, C_, D, *, chunk=128):
+    return _ssd_chunked(x, dt, A, B_, C_, D, chunk=chunk)

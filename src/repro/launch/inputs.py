@@ -1,0 +1,74 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation — the dry-run lowers
+train_step/serve_step against these.  ``make_inputs`` materializes real
+random arrays of the same shapes for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import COMPUTE_DTYPE, dp_axes, resolve_spec
+
+
+def train_input_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        return {
+            "features": ((B, S, cfg.d_model), COMPUTE_DTYPE),
+            "labels": ((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        st = S - cfg.vis_tokens
+        return {
+            "tokens": ((B, st), jnp.int32),
+            "vis_embed": ((B, cfg.vis_tokens, cfg.d_model), COMPUTE_DTYPE),
+            "labels": ((B, st), jnp.int32),
+        }
+    return {
+        "tokens": ((B, S), jnp.int32),
+        "labels": ((B, S), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh | None = None) -> dict:
+    """ShapeDtypeStructs (with shardings when a mesh is given)."""
+    shapes = train_input_shapes(cfg, shape)
+    out = {}
+    for name, (shp, dt) in shapes.items():
+        if mesh is not None:
+            axes = (dp_axes(mesh),) + (None,) * (len(shp) - 1)
+            sh = NamedSharding(mesh, resolve_spec(mesh, shp, axes))
+            out[name] = jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+        else:
+            out[name] = jax.ShapeDtypeStruct(shp, dt)
+    return out
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    shapes = train_input_shapes(cfg, shape)
+    out = {}
+    for name, (shp, _) in shapes.items():
+        axes = (dp_axes(mesh),) + (None,) * (len(shp) - 1)
+        out[name] = NamedSharding(mesh, resolve_spec(mesh, shp, axes))
+    return out
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Real random arrays (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, (shp, dt) in train_input_shapes(cfg, shape).items():
+        if name in ("tokens", "labels"):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=shp), jnp.int32
+            )
+        else:
+            out[name] = jnp.asarray(
+                rng.normal(scale=0.5, size=shp).astype(np.float32), dt
+            )
+    return out

@@ -1,0 +1,4 @@
+from repro.models.model import (
+    build_param_specs, init_params, param_shape_structs, param_shardings,
+    forward, loss_fn, padded_vocab,
+)

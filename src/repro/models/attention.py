@@ -1,0 +1,198 @@
+"""Attention blocks: GQA (Llama/Qwen/Granite style) and MLA (DeepSeek-V2 /
+MiniCPM3 style), training/prefill paths.
+
+Sharding: all projections are Megatron column->row pairs — the flattened
+head*dim output dimension is sharded over 'model' (this stays divisible even
+when the head COUNT is not, e.g. MiniCPM3's 40 heads on a 16-way axis), the
+output projection contracts it back, and XLA inserts exactly one all-reduce
+per attention block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import chunked_attention, dp_axes, rope, shard
+
+
+def _qkv_proj(x, p, cfg: ModelConfig):
+    """q/k/v projections, fused (one matmul, one bwd dx psum) or split."""
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if "wqkv" in p:
+        qkv = jnp.einsum("bsd,dh->bsh", x, p["wqkv"].astype(x.dtype))
+        if cfg.qkv_bias:
+            qkv = qkv + p["bqkv"].astype(x.dtype)
+        return jnp.split(qkv, [H * D, (H + KH) * D], axis=-1)
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def gqa_attention(x, p, cfg: ModelConfig, mesh, positions):
+    """x [B,S,d] -> [B,S,d].  p: wqkv|wq,wk,wv + wo (+biases)."""
+    B, S, _ = x.shape
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+
+    q, k, v = _qkv_proj(x, p, cfg)
+    q = shard(q, mesh, dp, None, "model").reshape(B, S, H, D)
+    k = shard(k, mesh, dp, None, "model").reshape(B, S, KH, D)
+    v = shard(v, mesh, dp, None, "model").reshape(B, S, KH, D)
+
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    out = chunked_attention(q, k, v, causal=cfg.causal)
+    out = out.reshape(B, S, H * D)
+    out = shard(out, mesh, dp, None, "model")
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def mla_attention(x, p, cfg: ModelConfig, mesh, positions):
+    """Multi-head Latent Attention (DeepSeek-V2 eq. 1-11), training path.
+
+    KV is compressed to a rank-``kv_lora_rank`` latent c_kv plus one shared
+    RoPE key head; during decode only (c_kv, k_rope) is cached — the paper's
+    93% KV-cache reduction (see serve/kvcache.py).
+    """
+    from repro.models.layers import rmsnorm
+
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+
+    # --- queries (optionally through a low-rank bottleneck) ---------------
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype))
+        cq = rmsnorm(cq, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = shard(q, mesh, dp, None, "model").reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed KV latent + shared rope key ---------------------------
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank :]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,dr]
+
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, p["wk_b"].astype(x.dtype))
+    k_nope = shard(k_nope, mesh, dp, None, "model").reshape(B, S, H, dn)
+    v = jnp.einsum("bsr,rh->bsh", c_kv, p["wv_b"].astype(x.dtype))
+    v = shard(v, mesh, dp, None, "model").reshape(B, S, H, dv)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1
+    )
+    # pad v up to qk head dim so the flash core sees one uniform D, then
+    # slice back (cheap relative to attention itself)
+    if dv < dn + dr:
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    else:
+        v_pad = v
+    out = chunked_attention(q_full, k_full, v_pad, causal=cfg.causal)
+    out = out[..., :dv].reshape(B, S, H * dv)
+    out = shard(out, mesh, dp, None, "model")
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_block(x, p, cfg: ModelConfig, mesh, positions):
+    if cfg.attn == "mla":
+        return mla_attention(x, p, cfg, mesh, positions)
+    return gqa_attention(x, p, cfg, mesh, positions)
+
+
+# ---------------------------------------------------------------------------
+# decode paths (one new token against a cache)
+# ---------------------------------------------------------------------------
+def gqa_decode(x, p, cfg: ModelConfig, k_cache, v_cache, pos):
+    """x [B,1,d]; k/v_cache [B,Smax,KH,hd]; pos scalar.
+    Returns (out [B,1,d], new k_cache, new v_cache).
+
+    The cache's Smax dim is sequence-sharded over 'model' (kvcache.py); the
+    contraction over it makes XLA emit the split-K partial-softmax combine.
+    """
+    B = x.shape[0]
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    posv = jnp.full((B, 1), pos, jnp.int32)
+
+    q, k, v = _qkv_proj(x[:, :1], p, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    q = rope(q.reshape(B, 1, H, D), posv, cfg.rope_theta)
+    k = rope(k.reshape(B, 1, KH, D), posv, cfg.rope_theta)
+    v = v.reshape(B, 1, KH, D)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+
+    rep = H // KH
+    qg = q.reshape(B, KH, rep, D)
+    s = jnp.einsum("bhrd,bshd->bhrs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / jnp.sqrt(float(D))
+    mask = jnp.arange(k_cache.shape[1]) <= pos
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrs,bshd->bhrd", w, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, H * D).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype), k_cache, v_cache
+
+
+def mla_decode(x, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
+    """MLA decode with matrix absorption (DeepSeek-V2 appendix): scores are
+    computed directly against the cached latent c_kv — W_uk is absorbed into
+    the query and W_uv into the output, so the per-step FLOPs and the cache
+    bytes both scale with kv_lora_rank instead of H*hd.
+
+    x [B,1,d]; ckv_cache [B,Smax,r]; krope_cache [B,Smax,dr].
+    """
+    from repro.models.layers import rmsnorm
+
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    xt = x[:, 0]
+
+    if cfg.q_lora_rank:
+        cq = rmsnorm(xt @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+        q = cq @ p["wq_b"].astype(x.dtype)
+    else:
+        q = xt @ p["wq"].astype(x.dtype)
+    q = q.reshape(B, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope[:, None], posv, cfg.rope_theta)[:, 0]
+
+    ckv = xt @ p["wkv_a"].astype(x.dtype)
+    c_new = rmsnorm(ckv[..., :r], p["kv_norm"], cfg.norm_eps)
+    kr_new = rope(ckv[..., r:][:, None, None, :], posv, cfg.rope_theta)[:, :, 0]
+
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_new[:, None, :], (0, pos, 0)
+    )
+    krope_cache = jax.lax.dynamic_update_slice(krope_cache, kr_new, (0, pos, 0))
+
+    wk_b = p["wk_b"].astype(jnp.float32).reshape(r, H, dn)
+    wv_b = p["wv_b"].astype(jnp.float32).reshape(r, H, dv)
+    # absorb W_uk into q:  [B,H,r]
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32), wk_b)
+    s = jnp.einsum("bhr,bsr->bhs", q_c, ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                       krope_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(float(dn + dr))
+    mask = jnp.arange(ckv_cache.shape[1]) <= pos
+    s = jnp.where(mask[None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", w, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", o_c, wv_b).reshape(B, 1, H * dv)
+    return o.astype(x.dtype) @ p["wo"].astype(x.dtype), ckv_cache, krope_cache

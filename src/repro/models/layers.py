@@ -1,0 +1,245 @@
+"""Shared model layers: norms, RoPE, chunked-flash attention, MLP.
+
+All functions are pure; parameters are plain pytrees.  Sharding is expressed
+with ``shard(x, mesh, axes...)`` constraints that silently skip any dim not
+evenly divisible by its mesh axes (the divisibility-aware analogue of
+logical axis rules; see sharding/partition.py for the rule table).
+
+Attention is a two-level chunked online-softmax scan (flash attention
+expressed in XLA): the outer q-chunk loop is rematerialized per chunk so the
+backward pass never holds more than one q-chunk of score-sized residuals —
+this is what makes prefill_32k compile inside HBM for every arch.  The TPU
+Pallas flash kernel (kernels/attention) slots in behind the same interface
+on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+COMPUTE_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in ax)
+    return mesh.shape[ax]
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def resolve_spec(mesh: Mesh, shape: Sequence[int], axes: Sequence[Any]) -> P:
+    """PartitionSpec with non-divisible or absent axes dropped per-dim."""
+    spec = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        names = ax if isinstance(ax, (tuple, list)) else (ax,)
+        names = tuple(a for a in names if a in mesh.axis_names)
+        if not names:
+            spec.append(None)
+            continue
+        if dim % axis_size(mesh, names) == 0:
+            spec.append(names if len(names) > 1 else names[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def shard(x: jnp.ndarray, mesh: Mesh | None, *axes) -> jnp.ndarray:
+    if mesh is None:
+        return x
+    spec = resolve_spec(mesh, x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# basic layers
+# ---------------------------------------------------------------------------
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Plain autodiff rmsnorm.  Its f32 internals leak f32 cotangents into
+    the backward graph, which XLA then all-reduces at f32 — 2x the TP
+    collective bytes (EXPERIMENTS.md §Perf iteration 1)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm_fused(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm with a hand-written VJP: f32 math stays LOCAL to the op and
+    both cotangents leave in the storage dtypes, so the partitioner's psums
+    on the residual stream run in bf16 (the fused-norm-kernel convention)."""
+    return rmsnorm_ref(x, w, eps)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Dispatcher: REPRO_RMSNORM=ref selects the plain-autodiff baseline
+    (used by the §Perf A/B probes); default is the custom-VJP version."""
+    import os
+
+    if os.environ.get("REPRO_RMSNORM", "fused") == "ref":
+        return rmsnorm_ref(x, w, eps)
+    return rmsnorm_fused(x, w, eps)
+
+
+def _rmsnorm_fwd(x, w, eps):
+    xf = x.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = (xf * rstd * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+    return y, (x, w, rstd)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, w, rstd = res
+    xf = x.astype(jnp.float32)
+    xhat = xf * rstd
+    gw = g.astype(jnp.float32) * (1.0 + w.astype(jnp.float32))
+    mean_gx = jnp.mean(gw * xhat, axis=-1, keepdims=True)
+    dx = rstd * (gw - xhat * mean_gx)
+    dw = jnp.sum(
+        g.astype(jnp.float32) * xhat,
+        axis=tuple(range(x.ndim - 1)),
+    )
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+rmsnorm_fused.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, D] (D even), positions [..., S] -> rotated x."""
+    d_half = x.shape[-1] // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(d_half, dtype=jnp.float32) / d_half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_mlp(x, p, mesh=None, dp=("data",), prefix=""):
+    """Megatron column->row parallel SwiGLU: one psum on the way out.
+
+    ``p`` carries either fused ``w_gateup`` [d, 2f] (one column matmul, one
+    backward dx psum — §Perf iteration 2) or split w_gate/w_up; ``prefix``
+    selects the MoE shared-expert key names.
+    """
+    if prefix + "w_gateup" in p:
+        # [d, 2, f] layout: the TP-sharded dim (f) is untouched by the
+        # gate/up split, so no resharding is introduced
+        gu = jnp.einsum("bsd,dcf->bscf", x, p[prefix + "w_gateup"].astype(x.dtype))
+        h, u = gu[:, :, 0, :], gu[:, :, 1, :]
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p[prefix + "w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p[prefix + "w_up"].astype(x.dtype))
+    h = shard(jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u,
+              mesh, dp, None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p[prefix + "w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked-flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+def _attn_one_q_chunk(q, k, v, q_pos, kv_pos, scale, causal):
+    """q [B,Qc,H,D] vs full k/v [B,S,KH,D] -> [B,Qc,H,D] (f32 accum)."""
+    B, Qc, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    rep = H // KH
+    kv_chunk = min(1024, S)
+    n_chunks = S // kv_chunk
+    qg = q.reshape(B, Qc, KH, rep, D)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, kpos = inputs  # [B,kv_chunk,KH,D], ..., [kv_chunk]
+        s = jnp.einsum(
+            "bqhrd,bkhd->bhrqk", qg.astype(jnp.float32), kc.astype(jnp.float32)
+        ) * scale
+        if causal:
+            mask = q_pos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    ks = k.reshape(B, n_chunks, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    kps = kv_pos.reshape(n_chunks, kv_chunk)
+    init = (
+        jnp.full((B, KH, rep, Qc), NEG_INF, jnp.float32),
+        jnp.zeros((B, KH, rep, Qc), jnp.float32),
+        jnp.zeros((B, KH, rep, Qc, D), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (ks, vs, kps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Qc, H, D)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    q_chunk: int = 1024,
+    pos_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash-style attention: q [B,Sq,H,D], k/v [B,Skv,KH,D] -> [B,Sq,H,D].
+
+    Sq must be divisible by q_chunk (callers use model seq lens, all pow-2).
+    """
+    B, Sq, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    q_chunk = min(q_chunk, Sq)
+    n_q = Sq // q_chunk
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    q_pos_all = jnp.arange(Sq, dtype=jnp.int32) + pos_offset
+
+    if n_q == 1:
+        out = _attn_one_q_chunk(q, k, v, q_pos_all, kv_pos, scale, causal)
+        return out.astype(q.dtype)
+
+    body = jax.checkpoint(
+        lambda qc, qp: _attn_one_q_chunk(qc, k, v, qp, kv_pos, scale, causal)
+    )
+
+    def step(_, inputs):
+        qc, qp = inputs
+        return None, body(qc, qp)
+
+    qs = q.reshape(B, n_q, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    qps = q_pos_all.reshape(n_q, q_chunk)
+    _, outs = jax.lax.scan(step, None, (qs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

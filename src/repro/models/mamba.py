@@ -1,0 +1,251 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked training path +
+single-token decode recurrence [arXiv:2405.21060].
+
+The SSD chunked algorithm: split the sequence into chunks of Q tokens;
+within a chunk the recurrence is computed as a (quadratic-in-Q) masked
+attention-like einsum; across chunks only the [H, P, N] states flow through
+an associative scan — O(S*Q) work, O(S/Q) scan depth, MXU-friendly einsums
+throughout.  This is the TPU-native formulation (the CUDA kernel's
+split-scan maps onto lax.associative_scan + batched GEMMs).
+
+Sharding: d_inner (and so SSD heads) over 'model'; B/C (group) projections
+are tiny and stay replicated; the inter-chunk scan carries [B, H_loc, P, N]
+states with no cross-device communication at all — the mixer needs exactly
+one psum (from the out_proj row-parallel matmul).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dp_axes, rmsnorm, shard
+
+CHUNK = 128
+
+
+def _ssd_chunked(x, dt, A, B_, C_, D, *, chunk=CHUNK, bf16_intra=False):
+    """SSD core. x [B,S,H,P], dt [B,S,H] (>0), A [H] (<0), B_/C_ [B,S,G,N],
+    D [H] -> y [B,S,H,P].
+
+    ``chunk`` trades intra-chunk quadratic bytes (prop. to S*chunk) against
+    scan depth; ``bf16_intra`` keeps the decay/score matrices in bf16 (the
+    log-cumsum stays f32) — §Perf iterations on the SSM cells."""
+    Bz, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert G == 1, "assigned SSM archs use a single B/C group"
+    chunk = min(chunk, S)
+    nc = S // chunk
+    rep = H // G
+    mm_dt = jnp.bfloat16 if bf16_intra else jnp.float32
+
+    xc = x.reshape(Bz, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bz, nc, chunk, H)
+    Bc = B_.reshape(Bz, nc, chunk, G, N)
+    Cc = C_.reshape(Bz, nc, chunk, G, N)
+
+    dA = dtc * A  # [B,nc,Q,H] negative
+    cum = jnp.cumsum(dA, axis=2)  # inclusive within-chunk log decay
+
+    # intra-chunk: y[i] = sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i . B_j) x_j
+    # B/C are per-GROUP — scores are computed once per group and the head
+    # dimension enters only through the decay, so nothing [.., H, N]-shaped
+    # is ever materialized (§Perf zamba2/v4: the jnp.repeat over H in f32
+    # was the dominant HBM term, ~2x the Q^2 matrices themselves)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc.astype(mm_dt),
+                        Bc.astype(mm_dt))
+    scores = jnp.repeat(scores, rep, axis=2)  # [B,nc,H,Q,Q] (group->head)
+    decay = jnp.exp(
+        cum.transpose(0, 1, 3, 2)[..., :, None]
+        - cum.transpose(0, 1, 3, 2)[..., None, :]
+    ).astype(mm_dt)  # [B,nc,H,Q,Q]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(tri, scores * decay, jnp.zeros((), mm_dt)) \
+        * dtc.transpose(0, 1, 3, 2)[..., None, :].astype(mm_dt)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xc.astype(mm_dt),
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    w = (jnp.exp(cum[:, :, -1:, :] - cum) * dtc).astype(mm_dt)  # [B,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                        Bc[..., 0, :].astype(mm_dt), w, xc.astype(mm_dt),
+                        preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    # inter-chunk associative scan, then shift to exclusive (state BEFORE c)
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dscan, sscan = jax.lax.associative_scan(
+        combine, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)), axis=0
+    )
+    s_incl = sscan.swapaxes(0, 1)  # [B,nc,H,P,N] state AFTER chunk c
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_incl[:, :1]), s_incl[:, :-1]], axis=1
+    )
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp",
+        Cc[..., 0, :].astype(jnp.float32), jnp.exp(cum), s_prev,
+    )
+    y = (y_intra + y_inter).reshape(Bz, S, H, Pd)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), s_incl[:, -1]  # final state for serving
+
+
+def mamba_block(x, p, cfg: ModelConfig, mesh):
+    """Full Mamba-2 mixer: in-proj (z,x,B,C,dt) -> causal depthwise conv ->
+    SSD -> gated RMSNorm -> out-proj.  x [B,S,d] -> [B,S,d]."""
+    Bz, S, d = x.shape
+    din = cfg.ssm_d_inner
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+
+    zx = jnp.einsum("bsd,de->bse", x, p["w_zx"].astype(x.dtype))
+    zx = shard(zx, mesh, dp, None, "model")
+    z, xin = zx[..., :din], zx[..., din:]
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype))
+
+    # causal depthwise conv (width W) on x / B / C channels
+    def causal_conv(u, w):  # u [B,S,C], w [W,C]
+        W = w.shape[0]
+        u_pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+        out = sum(
+            u_pad[:, i : i + S, :] * w[i][None, None, :] for i in range(W)
+        )
+        return out
+
+    xin = jax.nn.silu(
+        causal_conv(xin, p["conv_x"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    bc = jax.nn.silu(
+        causal_conv(bc, p["conv_bc"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    B_ = bc[..., : G * N].reshape(Bz, S, G, N)
+    C_ = bc[..., G * N :].reshape(Bz, S, G, N)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, _ = _ssd_chunked(
+        xin.reshape(Bz, S, H, Pd), dt, A, B_, C_, p["D"].astype(jnp.float32),
+        chunk=cfg.ssm_chunk, bf16_intra=cfg.ssm_bf16_intra,
+    )
+    y = y.reshape(Bz, S, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = shard(y, mesh, dp, None, "model")
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+
+
+def mamba_prefill(x, p, cfg: ModelConfig, mesh):
+    """Like mamba_block but also returns the serving state after the prompt:
+    conv histories (last W-1 pre-conv channel inputs) + final SSM state."""
+    Bz, S, d = x.shape
+    din = cfg.ssm_d_inner
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+
+    zx = jnp.einsum("bsd,de->bse", x, p["w_zx"].astype(x.dtype))
+    z, xin_raw = zx[..., :din], zx[..., din:]
+    bc_raw = jnp.einsum("bsd,de->bse", x, p["w_bc"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype))
+
+    def causal_conv(u, w):
+        Wd = w.shape[0]
+        u_pad = jnp.pad(u, ((0, 0), (Wd - 1, 0), (0, 0)))
+        return sum(u_pad[:, i : i + S, :] * w[i][None, None, :] for i in range(Wd))
+
+    xin = jax.nn.silu(
+        causal_conv(xin_raw, p["conv_x"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    bc = jax.nn.silu(
+        causal_conv(bc_raw, p["conv_bc"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    B_ = bc[..., : G * N].reshape(Bz, S, G, N)
+    C_ = bc[..., G * N :].reshape(Bz, S, G, N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = _ssd_chunked(
+        xin.reshape(Bz, S, H, Pd), dt, A, B_, C_, p["D"].astype(jnp.float32),
+        chunk=cfg.ssm_chunk, bf16_intra=cfg.ssm_bf16_intra,
+    )
+    y = y.reshape(Bz, S, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+
+    # conv histories: last W-1 raw (pre-conv) inputs, left-padded for S<W-1
+    def hist(u):
+        u_pad = jnp.pad(u, ((0, 0), (max(0, W - 1 - S), 0), (0, 0)))
+        return u_pad[:, -(W - 1) :, :]
+
+    state = {
+        "conv_x": hist(xin_raw),
+        "conv_bc": hist(bc_raw),
+        "ssm": final_state,  # [B, H, P, N] from _ssd_chunked
+    }
+    return out, state
+
+
+def mamba_decode_step(x, state, p, cfg: ModelConfig):
+    """Single-token recurrence.  x [B,1,d]; state dict with
+    conv_x [B,W-1,din], conv_bc [B,W-1,2GN], ssm [B,H,P,N] (f32).
+    Returns (y [B,1,d], new state)."""
+    Bz = x.shape[0]
+    din = cfg.ssm_d_inner
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv
+    xt = x[:, 0, :]
+
+    zx = xt @ p["w_zx"].astype(xt.dtype)
+    z, xin = zx[..., :din], zx[..., din:]
+    bc = xt @ p["w_bc"].astype(xt.dtype)
+    dt_raw = xt @ p["w_dt"].astype(xt.dtype)
+
+    def conv_step(u, hist, w):  # u [B,C], hist [B,W-1,C], w [W,C]
+        full = jnp.concatenate([hist, u[:, None, :]], axis=1)  # [B,W,C]
+        out = jnp.einsum("bwc,wc->bc", full, w)
+        return out, full[:, 1:, :]
+
+    xin_c, conv_x_new = conv_step(
+        xin, state["conv_x"], p["conv_x"].astype(xt.dtype)
+    )
+    bc_c, conv_bc_new = conv_step(
+        bc, state["conv_bc"], p["conv_bc"].astype(xt.dtype)
+    )
+    xin_c = jax.nn.silu(xin_c.astype(jnp.float32))
+    bc_c = jax.nn.silu(bc_c.astype(jnp.float32))
+    B_ = jnp.repeat(bc_c[..., : G * N].reshape(Bz, G, N), H // G, axis=1)
+    C_ = jnp.repeat(bc_c[..., G * N :].reshape(Bz, G, N), H // G, axis=1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # [B,H]
+
+    xh = xin_c.reshape(Bz, H, Pd)
+    ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, B_
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, C_)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bz, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out[:, None, :], {
+        "conv_x": conv_x_new, "conv_bc": conv_bc_new, "ssm": ssm
+    }

@@ -1,0 +1,409 @@
+"""Model assembly: parameter specs, init, forward, loss for all 10 archs.
+
+Parameters are plain nested dicts; per-layer tensors are stacked on a
+leading [L] axis and consumed by one ``lax.scan`` (rematerialized per layer)
+so the HLO stays compact at 80 layers and the dry-run compiles fast.
+
+Every leaf is declared once as a ``PS(shape, axes, init)`` spec; the same
+tree generates (a) ShapeDtypeStructs for the dry-run, (b) NamedShardings via
+the divisibility-aware resolver, (c) real initialized arrays for the smoke
+tests and the 100M-scale training example.
+
+Vocab padding: embedding/lm_head vocab dims are padded to a multiple of 512
+when sharded (Megatron convention) — granite's 49155, minicpm3's 73448 and
+mamba2's 50280 are not divisible by the 16-way model axis.  Padded logits
+are masked with -1e30 before the softmax so the loss is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import attention_block
+from repro.models.mamba import mamba_block
+from repro.models.moe import moe_block
+
+FSDP = "data"      # parameter/optimizer sharding axis (ZeRO-3 style)
+TP = "model"       # tensor-parallel axis
+AUX_LOSS_COEF = 0.01
+VOCAB_PAD = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class PS:
+    """Parameter spec: shape + partition axes + init recipe."""
+    shape: tuple
+    axes: tuple
+    init: str = "normal"
+    scale: float = 0.02
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    if cfg.vocab_size < 8192:
+        return cfg.vocab_size  # tiny head (hubert): replicated, no padding
+    return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+def _attn_specs(cfg: ModelConfig, nl: int) -> dict:
+    d = cfg.d_model
+    if cfg.attn == "mla":
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        H = cfg.num_heads
+        s: dict[str, PS] = {
+            "wkv_a": PS((nl, d, cfg.kv_lora_rank + dr), (None, FSDP, None)),
+            "kv_norm": PS((nl, cfg.kv_lora_rank), (None, None), "zeros"),
+            "wk_b": PS((nl, cfg.kv_lora_rank, H * dn), (None, FSDP, TP)),
+            "wv_b": PS((nl, cfg.kv_lora_rank, H * dv), (None, FSDP, TP)),
+            "wo": PS((nl, H * dv, d), (None, TP, FSDP), scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+        }
+        if cfg.q_lora_rank:
+            s["wq_a"] = PS((nl, d, cfg.q_lora_rank), (None, FSDP, None))
+            s["q_norm"] = PS((nl, cfg.q_lora_rank), (None, None), "zeros")
+            s["wq_b"] = PS((nl, cfg.q_lora_rank, H * (dn + dr)), (None, FSDP, TP))
+        else:
+            s["wq"] = PS((nl, d, H * (dn + dr)), (None, FSDP, TP))
+        return s
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    wo = PS((nl, H * hd, d), (None, TP, FSDP),
+            scale=0.02 / math.sqrt(2 * cfg.num_layers))
+    if cfg.fused_qkv:
+        s = {
+            "wqkv": PS((nl, d, (H + 2 * KH) * hd), (None, FSDP, TP)),
+            "wo": wo,
+        }
+        if cfg.qkv_bias:
+            s["bqkv"] = PS((nl, (H + 2 * KH) * hd), (None, TP), "zeros")
+        return s
+    s = {
+        "wq": PS((nl, d, H * hd), (None, FSDP, TP)),
+        "wk": PS((nl, d, KH * hd), (None, FSDP, TP)),
+        "wv": PS((nl, d, KH * hd), (None, FSDP, TP)),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        s["bq"] = PS((nl, H * hd), (None, TP), "zeros")
+        s["bk"] = PS((nl, KH * hd), (None, TP), "zeros")
+        s["bv"] = PS((nl, KH * hd), (None, TP), "zeros")
+    return s
+
+
+def _mlp_specs(d: int, ff: int, nl: int, cfg: ModelConfig) -> dict:
+    down_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    if cfg.fused_gate_up:
+        return {
+            "w_gateup": PS((nl, d, 2, ff), (None, FSDP, None, TP)),
+            "w_down": PS((nl, ff, d), (None, TP, FSDP), scale=down_scale),
+        }
+    return {
+        "w_gate": PS((nl, d, ff), (None, FSDP, TP)),
+        "w_up": PS((nl, d, ff), (None, FSDP, TP)),
+        "w_down": PS((nl, ff, d), (None, TP, FSDP), scale=down_scale),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, nl: int) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    down_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    s = {
+        "router": PS((nl, d, E), (None, FSDP, None)),
+        "w_gate": PS((nl, E, d, f), (None, TP, FSDP, None)),
+        "w_up": PS((nl, E, d, f), (None, TP, FSDP, None)),
+        "w_down": PS((nl, E, f, d), (None, TP, None, FSDP), scale=down_scale),
+    }
+    if cfg.num_shared_experts:
+        sf = f * cfg.num_shared_experts
+        if cfg.fused_gate_up:
+            s["shared_w_gateup"] = PS((nl, d, 2, sf), (None, FSDP, None, TP))
+        else:
+            s["shared_w_gate"] = PS((nl, d, sf), (None, FSDP, TP))
+            s["shared_w_up"] = PS((nl, d, sf), (None, FSDP, TP))
+        s["shared_w_down"] = PS((nl, sf, d), (None, TP, FSDP), scale=down_scale)
+    return s
+
+
+def _mamba_specs(cfg: ModelConfig, nl: int) -> dict:
+    d, din = cfg.d_model, cfg.ssm_d_inner
+    H, G, N, W = cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "w_zx": PS((nl, d, 2 * din), (None, FSDP, TP)),
+        "w_bc": PS((nl, d, 2 * G * N), (None, FSDP, None)),
+        "w_dt": PS((nl, d, H), (None, FSDP, TP)),
+        "dt_bias": PS((nl, H), (None, TP), "dt_bias"),
+        "A_log": PS((nl, H), (None, TP), "A_log"),
+        "D": PS((nl, H), (None, TP), "ones_raw"),
+        "conv_x": PS((nl, W, din), (None, None, TP), scale=0.2),
+        "conv_bc": PS((nl, W, 2 * G * N), (None, None, None), scale=0.2),
+        "norm": PS((nl, din), (None, TP), "zeros"),
+        "w_out": PS((nl, din, d), (None, TP, FSDP),
+                    scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def build_param_specs(cfg: ModelConfig) -> dict:
+    d, nl = cfg.d_model, cfg.num_layers
+    vp = padded_vocab(cfg)
+    specs: dict[str, Any] = {}
+    if cfg.frontend != "audio":
+        specs["embed"] = PS((vp, d), (TP, FSDP), scale=1.0)
+    blocks: dict[str, Any] = {"ln1": PS((nl, d), (None, None), "zeros")}
+    if cfg.family in ("ssm",):
+        blocks["mamba"] = _mamba_specs(cfg, nl)
+    elif cfg.family == "hybrid":
+        blocks["mamba"] = _mamba_specs(cfg, nl)
+        specs["shared"] = {
+            "ln1": PS((d,), (None,), "zeros"),
+            "attn": {k: PS(v.shape[1:], v.axes[1:], v.init, v.scale)
+                     for k, v in _attn_specs(cfg, 1).items()},
+            "ln2": PS((d,), (None,), "zeros"),
+            "mlp": {k: PS(v.shape[1:], v.axes[1:], v.init, v.scale)
+                    for k, v in _mlp_specs(d, cfg.d_ff, 1, cfg).items()},
+        }
+        # strip the leading stacked dim the helpers added
+        for grp in ("attn", "mlp"):
+            specs["shared"][grp] = {
+                k: PS(v.shape, v.axes, v.init, v.scale)
+                for k, v in specs["shared"][grp].items()
+            }
+    else:
+        blocks["attn"] = _attn_specs(cfg, nl)
+        blocks["ln2"] = PS((nl, d), (None, None), "zeros")
+        if cfg.family == "moe":
+            blocks["moe"] = _moe_specs(cfg, nl)
+        else:
+            blocks["mlp"] = _mlp_specs(d, cfg.d_ff, nl, cfg)
+    specs["blocks"] = blocks
+    specs["final_norm"] = PS((d,), (None,), "zeros")
+    specs["lm_head"] = PS((d, vp), (FSDP, TP))
+    return specs
+
+
+# --- helpers stripping the stacked dim for the hybrid's shared block -------
+def _unstack(spec: PS) -> PS:
+    return PS(spec.shape[1:], spec.axes[1:], spec.init, spec.scale)
+
+
+# fix the hybrid shared specs built above (leading (1, ...) from helpers)
+def _fix_shared(specs: dict, cfg: ModelConfig):
+    if "shared" not in specs:
+        return specs
+    sh = specs["shared"]
+    sh["attn"] = {k: _unstack(v) if v.shape[0] == 1 else v for k, v in sh["attn"].items()}
+    sh["mlp"] = {k: _unstack(v) if v.shape[0] == 1 else v for k, v in sh["mlp"].items()}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# spec consumers
+# ---------------------------------------------------------------------------
+def param_shape_structs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    specs = _fix_shared(build_param_specs(cfg), cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, _leaf_dtype(s, dtype)),
+        specs, is_leaf=lambda x: isinstance(x, PS),
+    )
+
+
+def _leaf_dtype(s: PS, dtype):
+    # SSD dynamics + norms stay f32 for numerical safety
+    return jnp.float32 if s.init in ("A_log", "dt_bias", "ones_raw", "zeros") else dtype
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    specs = _fix_shared(build_param_specs(cfg), cfg)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, L.resolve_spec(mesh, s.shape, s.axes)),
+        specs, is_leaf=lambda x: isinstance(x, PS),
+    )
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    specs = _fix_shared(build_param_specs(cfg), cfg)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, PS)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(s: PS, k):
+        dt = _leaf_dtype(s, dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones_raw":
+            return jnp.ones(s.shape, dt)
+        if s.init == "A_log":
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        if s.init == "dt_bias":
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1e-3, 1e-1)
+            return (u + jnp.log(-jnp.expm1(-u))).astype(dt)  # softplus^-1
+        return L.normal_init(k, s.shape, dt, s.scale)
+
+    return jax.tree.unflatten(treedef, [init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_count(cfg: ModelConfig) -> int:
+    specs = _fix_shared(build_param_specs(cfg), cfg)
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, PS))
+    )
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: top-k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    E, k = cfg.num_experts, cfg.experts_per_token
+    expert_p = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_layers
+    return total - (E - k) * expert_p // 1  # routed experts not hit
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _apply_shared_block(x, sp, cfg, mesh, positions):
+    h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    x = x + attention_block(h, sp["attn"], cfg, mesh, positions)
+    h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    x = x + L.swiglu_mlp(
+        h, sp["mlp"], mesh=mesh, dp=L.dp_axes(mesh) if mesh else ("data",),
+    )
+    return x
+
+
+def _block_body(cfg: ModelConfig, mesh, shared_params=None):
+    """fn(carry=(x, aux), layer/group params) -> (carry, None).
+
+    For the hybrid family the scanned unit is a GROUP of ``every`` mamba
+    layers followed by one shared attention+MLP block — no lax.cond in the
+    hot path, and the scanned unit is homogeneous (compact HLO, exact
+    cost extrapolation).
+    """
+
+    def body(carry, lp):
+        x, aux = carry
+        B, S, _ = x.shape
+        positions = jnp.arange(S, dtype=jnp.int32)
+        if cfg.family == "hybrid":
+            every = cfg.shared_attn_every
+            for j in range(every):
+                ljp = jax.tree.map(lambda a: a[j], lp)
+                h = L.rmsnorm(x, ljp["ln1"], cfg.norm_eps)
+                x = x + mamba_block(h, ljp["mamba"], cfg, mesh)
+            x = _apply_shared_block(x, shared_params, cfg, mesh, positions)
+        elif cfg.family == "ssm":
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            x = x + mamba_block(h, lp["mamba"], cfg, mesh)
+        else:
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            x = x + attention_block(h, lp["attn"], cfg, mesh, positions)
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, a = moe_block(h, lp["moe"], cfg, mesh)
+                x = x + mo
+                aux = aux + a
+            else:
+                x = x + L.swiglu_mlp(
+                    h, lp["mlp"], mesh=mesh,
+                    dp=L.dp_axes(mesh) if mesh else ("data",),
+                )
+        return (x, aux), None
+
+    return body
+
+
+def _group_blocks(cfg: ModelConfig, blocks):
+    """Hybrid: restack [L, ...] block params as [G, every, ...]."""
+    if cfg.family != "hybrid":
+        return blocks
+    every = cfg.shared_attn_every
+    g = cfg.num_layers // every
+    return jax.tree.map(
+        lambda a: a.reshape((g, every) + a.shape[1:]), blocks
+    )
+
+
+def forward(params, inputs: dict, cfg: ModelConfig, mesh: Mesh | None,
+            *, last_only: bool = False, unroll: bool = False):
+    """-> (logits [B, S, V_pad] (f32), aux_loss scalar).
+
+    ``last_only`` computes logits for the final position only — the
+    serving-prefill shape (the lm_head matmul over all 32k positions would
+    otherwise dominate prefill cost and memory).
+    ``unroll`` replaces the layer scan with a python loop; used by the
+    dry-run cost probes (XLA's cost_analysis counts a while-loop body once,
+    so exact totals need unrolled shallow lowers; see launch/dryrun.py).
+    """
+    dp = L.dp_axes(mesh) if mesh is not None else ("data",)
+    if cfg.frontend == "audio":
+        x = inputs["features"].astype(L.COMPUTE_DTYPE)
+    else:
+        tokens = inputs["tokens"]
+        emb = params["embed"]
+        x = emb.astype(L.COMPUTE_DTYPE)[tokens]
+        if cfg.frontend == "vision":
+            vis = inputs["vis_embed"].astype(L.COMPUTE_DTYPE)
+            x = jnp.concatenate([vis, x], axis=1)
+    x = L.shard(x, mesh, dp, None, None)
+
+    shared = params.get("shared")
+    import os
+    policy = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[os.environ.get("REPRO_REMAT", "nothing")]
+    body = jax.checkpoint(_block_body(cfg, mesh, shared), policy=policy)
+    blocks = _group_blocks(cfg, params["blocks"])
+    carry = (x, jnp.zeros((), jnp.float32))
+    if unroll:
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], blocks)
+            carry, _ = body(carry, lp)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, carry, blocks)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:, :]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+    ).astype(jnp.float32)
+    logits = L.shard(logits, mesh, dp, None, TP)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask[None, None, :], logits, -1e30)
+    return logits, aux
+
+
+def loss_fn(params, inputs: dict, cfg: ModelConfig, mesh: Mesh | None,
+            *, unroll: bool = False):
+    """Mean CE over labels >= 0 (+ MoE aux).  Returns (loss, metrics)."""
+    logits, aux = forward(params, inputs, cfg, mesh, unroll=unroll)
+    labels = inputs["labels"]
+    if cfg.frontend == "vision":
+        pad = jnp.full(
+            (labels.shape[0], cfg.vis_tokens), -1, labels.dtype
+        )
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.where(mask, lse - gold, 0.0)
+    ntok = jnp.maximum(mask.sum(), 1)
+    loss = ce.sum() / ntok
+    total = loss + AUX_LOSS_COEF * aux
+    return total, {"ce": loss, "aux": aux, "ntok": ntok}

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with explicit expert parallelism via shard_map.
+
+Collective schedule (DESIGN.md section 5): activations enter replicated over
+'model' (they are, after the attention all-reduce); every model-rank owns
+E/tp experts and FSDP-gathers their weights over 'data' at the shard_map
+boundary; routing/top-k is computed redundantly (deterministic) on every
+rank; each rank sort-dispatches only the assignments that hit ITS experts
+into a capacity-bounded [E_local, C, d] buffer, runs the grouped SwiGLU
+GEMMs, scatter-adds gated outputs back to token slots, and ONE psum over
+'model' combines the top-k partial sums.  No all_to_all, no partitioner
+surprises — the dry-run HLO shows exactly L all-reduces for L MoE layers.
+
+Token dropping: capacity C = ceil(T*k/E * capacity_factor); dropped
+assignments simply contribute nothing (their gate weight is lost), standard
+GShard-style behaviour.  Aux load-balance loss is returned for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dp_axes
+
+
+def _local_dispatch_compute(x_flat, router_w, w_gate, w_up, w_down, *,
+                            cfg: ModelConfig, tp: int, my_rank):
+    """Per-rank MoE math. x_flat [T, d] (model-replicated local tokens);
+    w_* [E_loc, d|f, f|d] local expert weights."""
+    T, d = x_flat.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    E_loc = E // tp
+    capacity = int(T * K / E * cfg.capacity_factor) + 1
+
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # aux load-balance loss (Switch eq. 4), computed on full routing
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # flatten assignments, keep only local experts
+    flat_e = expert_idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = gate_vals.reshape(-1)
+    local = (flat_e >= my_rank * E_loc) & (flat_e < (my_rank + 1) * E_loc)
+    e_loc = jnp.where(local, flat_e - my_rank * E_loc, E_loc)  # E_loc = drop
+
+    # rank within expert via sort (stable) + run-rank
+    order = jnp.argsort(e_loc, stable=True)
+    e_sorted = e_loc[order]
+    idx = jnp.arange(e_sorted.shape[0], dtype=jnp.int32)
+    start = jnp.concatenate(
+        [jnp.ones((1,), bool), e_sorted[1:] != e_sorted[:-1]]
+    )
+    run_start = jax.lax.cummax(jnp.where(start, idx, -1))
+    pos = idx - run_start
+    ok = (e_sorted < E_loc) & (pos < capacity)
+    slot = jnp.where(ok, e_sorted * capacity + pos, E_loc * capacity)
+
+    # gather tokens into the capacity buffer [E_loc*C, d]
+    buf = jnp.zeros((E_loc * capacity + 1, d), x_flat.dtype)
+    buf = buf.at[slot].set(x_flat[flat_t[order]], mode="drop")
+    buf = buf[:-1].reshape(E_loc, capacity, d)
+
+    # grouped SwiGLU
+    h = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(buf.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(buf.dtype))
+
+    # scatter-add gated outputs back to tokens
+    y_flat = y.reshape(E_loc * capacity, d)
+    out = jnp.zeros((T, d), jnp.float32)
+    contrib = jnp.where(ok[:, None], y_flat[jnp.where(ok, slot, 0)], 0.0)
+    out = out.at[flat_t[order]].add(
+        contrib.astype(jnp.float32) * flat_g[order][:, None], mode="drop"
+    )
+    return out.astype(x_flat.dtype), aux
+
+
+def moe_block(x, p, cfg: ModelConfig, mesh: Mesh):
+    """x [B,S,d] -> ([B,S,d], aux_loss).  p: router [d,E], w_gate/w_up
+    [E,d,f], w_down [E,f,d] (+ shared expert SwiGLU if configured)."""
+    B, S, d = x.shape
+    dp = dp_axes(mesh)
+    tp = mesh.shape["model"]
+
+    def shard_fn(xl, router_w, w_gate, w_up, w_down):
+        my_rank = jax.lax.axis_index("model")
+        T = xl.shape[0] * xl.shape[1]
+        out, aux = _local_dispatch_compute(
+            xl.reshape(T, d), router_w, w_gate, w_up, w_down,
+            cfg=cfg, tp=tp, my_rank=my_rank,
+        )
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux, "model")
+        return out.reshape(xl.shape), aux
+
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None), P(None, None),
+            P("model", None, None), P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )
+    out, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if cfg.num_shared_experts:
+        from repro.models.layers import swiglu_mlp
+
+        out = out + swiglu_mlp(x, p, mesh=mesh, dp=dp, prefix="shared_")
+    return out, aux

@@ -1,0 +1,2 @@
+from repro.serve.kvcache import cache_shapes, init_cache, cache_shardings
+from repro.serve.serve_step import make_decode_step, prefill_with_cache

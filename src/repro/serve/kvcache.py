@@ -1,0 +1,100 @@
+"""KV / state caches for serving, with scale-aware sharding.
+
+Cache layouts per family (leading [L] = per-layer stacked, consumed by the
+decode scan):
+
+  gqa    : k, v          [L, B, Smax, KH, hd]   (bf16)
+  mla    : c_kv          [L, B, Smax, kv_lora]  — the compressed latent;
+           k_rope        [L, B, Smax, dr]         93%+ smaller than full KV
+  ssm    : conv_x [L,B,W-1,din], conv_bc [L,B,W-1,2GN], ssm [L,B,H,P,N] f32
+           (O(1) in context length — why long_500k is SSM-only)
+  hybrid : ssm caches + shared-attn sk/sv [n_inv, B, Smax, KH, hd]
+
+Sharding: sequence dim over 'model' (split-K / flash-decoding style: each
+model-rank attends over its sequence slice; XLA's partitioner emits the
+logsumexp-combine psum).  Batch over (pod, data) when divisible; for
+long_500k's batch=1 the resolver drops it and KV heads shard over 'data'
+instead — the rule table lives in resolve (below).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, dp_axes, resolve_spec
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """{name: (shape, dtype, axes)} — axes feed the divisibility resolver."""
+    nl = cfg.num_layers
+    out: dict = {"pos": ((), jnp.int32, ())}
+    dp = ("pod", "data")  # resolver drops absent names
+
+    def attn_axes(bdim):
+        # batch over dp when divisible, else KV-heads over data (long_500k)
+        return (None, dp, "model", None, None)
+
+    if cfg.family in ("ssm", "hybrid"):
+        din = cfg.ssm_d_inner
+        H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        W, G = cfg.ssm_conv, cfg.ssm_groups
+        out["conv_x"] = ((nl, batch, W - 1, din), COMPUTE_DTYPE,
+                         (None, dp, None, "model"))
+        out["conv_bc"] = ((nl, batch, W - 1, 2 * G * N), COMPUTE_DTYPE,
+                          (None, dp, None, None))
+        out["ssm"] = ((nl, batch, H, Pd, N), jnp.float32,
+                      (None, dp, "model", None, None))
+    if cfg.family == "hybrid":
+        n_inv = cfg.num_layers // cfg.shared_attn_every
+        KH, hd = cfg.num_kv_heads, cfg.head_dim
+        out["sk"] = ((n_inv, batch, max_len, KH, hd), COMPUTE_DTYPE,
+                     (None, dp, "model", "data" if batch == 1 else None, None))
+        out["sv"] = out["sk"]
+    elif cfg.attn == "mla":
+        out["c_kv"] = ((nl, batch, max_len, cfg.kv_lora_rank), COMPUTE_DTYPE,
+                       (None, dp, "model", None))
+        out["k_rope"] = ((nl, batch, max_len, cfg.qk_rope_head_dim),
+                         COMPUTE_DTYPE, (None, dp, "model", None))
+    elif cfg.attn == "gqa" and cfg.family not in ("ssm",):
+        KH, hd = cfg.num_kv_heads, cfg.head_dim
+        out["k"] = ((nl, batch, max_len, KH, hd), COMPUTE_DTYPE,
+                    attn_axes(batch))
+        out["v"] = out["k"]
+    return out
+
+
+def cache_shape_structs(cfg, batch, max_len, mesh: Mesh | None = None) -> dict:
+    shapes = cache_shapes(cfg, batch, max_len)
+    out = {}
+    for name, (shp, dt, axes) in shapes.items():
+        if mesh is not None:
+            sh = NamedSharding(mesh, resolve_spec(mesh, shp, axes))
+            out[name] = jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+        else:
+            out[name] = jax.ShapeDtypeStruct(shp, dt)
+    return out
+
+
+def cache_shardings(cfg, batch, max_len, mesh: Mesh) -> dict:
+    shapes = cache_shapes(cfg, batch, max_len)
+    return {
+        name: NamedSharding(mesh, resolve_spec(mesh, shp, axes))
+        for name, (shp, dt, axes) in shapes.items()
+    }
+
+
+def init_cache(cfg, batch, max_len, mesh: Mesh | None = None) -> dict:
+    shapes = cache_shapes(cfg, batch, max_len)
+    return {
+        name: jnp.zeros(shp, dt) for name, (shp, dt, _) in shapes.items()
+    }
+
+
+def cache_bytes(cfg, batch, max_len) -> int:
+    shapes = cache_shapes(cfg, batch, max_len)
+    total = 0
+    for name, (shp, dt, _) in shapes.items():
+        total += int(jnp.dtype(dt).itemsize) * int(jnp.prod(jnp.array(shp)))
+    return total

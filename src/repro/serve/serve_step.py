@@ -1,0 +1,296 @@
+"""Serving steps: batched single-token decode + cache-building prefill.
+
+``make_decode_step`` builds the jitted serve_step the dry-run lowers for
+decode_32k / long_500k: one new token per sequence against the cache, layers
+consumed by a lax.scan over stacked (params, cache) slices.
+
+``prefill_with_cache`` is the host-side (unrolled-layer) prefill used by the
+serving example and the decode-vs-forward consistency tests — it fills the
+cache from a prompt so that greedy decode continues exactly where a plain
+forward pass would.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    attention_block, gqa_decode, mla_decode,
+)
+from repro.models.mamba import mamba_block, mamba_decode_step
+from repro.models.moe import moe_block
+from repro.models.model import padded_vocab
+
+
+def _ffn_decode(x, lp, cfg, mesh, aux):
+    """Post-attention FFN for one decode token (dense or MoE)."""
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mo, a = moe_block(h, lp["moe"], cfg, mesh)
+        return x + mo, aux + a
+    return x + L.swiglu_mlp(
+        h, lp["mlp"], mesh=mesh, dp=L.dp_axes(mesh) if mesh else ("data",),
+    ), aux
+
+
+def _scan_or_unroll(body, carry, xs, unroll: bool):
+    """lax.scan over a dict of stacked xs, or the python-unrolled twin."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def make_decode_step(cfg: ModelConfig, mesh, *, unroll: bool = False):
+    """Returns decode_step(params, cache, tokens [B,1]) -> (logits, cache).
+
+    Hybrid archs scan over GROUPS (``every`` mamba layers + the shared
+    attention block); the shared block's per-invocation KV slice rides the
+    scan as xs/ys, so there is no lax.cond or dynamic cache indexing."""
+
+    def decode_step(params, cache, tokens):
+        pos = cache["pos"]
+        x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]  # [B,1,d]
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("ssm", "hybrid"):
+            shared = params.get("shared")
+            every = max(cfg.shared_attn_every, 1)
+
+            def group(a):  # [L, ...] -> [G, every, ...] for hybrid
+                if cfg.family != "hybrid":
+                    return a
+                return a.reshape((a.shape[0] // every, every) + a.shape[1:])
+
+            xs = {
+                "blocks": jax.tree.map(group, params["blocks"]),
+                "conv_x": group(cache["conv_x"]),
+                "conv_bc": group(cache["conv_bc"]),
+                "ssm": group(cache["ssm"]),
+            }
+            if cfg.family == "hybrid":
+                xs["sk"] = cache["sk"]
+                xs["sv"] = cache["sv"]
+
+            def body(x, sl):
+                steps = every if cfg.family == "hybrid" else 1
+                new_states = {"conv_x": [], "conv_bc": [], "ssm": []}
+                for j in range(steps):
+                    take = (lambda a: a[j]) if cfg.family == "hybrid" else (lambda a: a)
+                    lp = jax.tree.map(take, sl["blocks"])
+                    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                    state = {k: take(sl[k]) for k in ("conv_x", "conv_bc", "ssm")}
+                    y, ns = mamba_decode_step(h, state, lp["mamba"], cfg)
+                    x = x + y
+                    for k in new_states:
+                        new_states[k].append(ns[k])
+                if cfg.family == "hybrid":
+                    out_states = {
+                        k: jnp.stack(v) for k, v in new_states.items()
+                    }
+                    h = L.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+                    o, ki, vi = gqa_decode(
+                        h, shared["attn"], cfg, sl["sk"], sl["sv"], pos
+                    )
+                    x = x + o
+                    h = L.rmsnorm(x, shared["ln2"], cfg.norm_eps)
+                    x = x + L.swiglu_mlp(
+                        h, shared["mlp"], mesh=mesh,
+                        dp=L.dp_axes(mesh) if mesh else ("data",),
+                    )
+                    out_states["sk"] = ki
+                    out_states["sv"] = vi
+                else:
+                    out_states = {k: v[0] for k, v in new_states.items()}
+                return x, out_states
+
+            x, new_states = _scan_or_unroll(body, x, xs, unroll)
+
+            def ungroup(a):
+                if cfg.family != "hybrid":
+                    return a
+                return a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
+
+            cache = {**cache}
+            for k in ("conv_x", "conv_bc", "ssm"):
+                cache[k] = ungroup(new_states[k])
+            if cfg.family == "hybrid":
+                cache["sk"] = new_states["sk"]
+                cache["sv"] = new_states["sv"]
+        else:
+            if cfg.attn == "mla":
+                xs = {
+                    "blocks": params["blocks"],
+                    "c_kv": cache["c_kv"], "k_rope": cache["k_rope"],
+                }
+
+                def body(carry, sl):
+                    x, aux = carry
+                    lp = sl["blocks"]
+                    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                    o, ck, kr = mla_decode(
+                        h, lp["attn"], cfg, sl["c_kv"], sl["k_rope"], pos
+                    )
+                    x, aux = _ffn_decode(x + o, lp, cfg, mesh, aux)
+                    return (x, aux), {"c_kv": ck, "k_rope": kr}
+
+                (x, _), new_kv = _scan_or_unroll(body, (x, aux0), xs, unroll)
+                cache = {**cache, **new_kv}
+            else:
+                xs = {"blocks": params["blocks"], "k": cache["k"], "v": cache["v"]}
+
+                def body(carry, sl):
+                    x, aux = carry
+                    lp = sl["blocks"]
+                    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                    o, k, v = gqa_decode(h, lp["attn"], cfg, sl["k"], sl["v"], pos)
+                    x, aux = _ffn_decode(x + o, lp, cfg, mesh, aux)
+                    return (x, aux), {"k": k, "v": v}
+
+                (x, _), new_kv = _scan_or_unroll(body, (x, aux0), xs, unroll)
+                cache = {**cache, **new_kv}
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+        ).astype(jnp.float32)
+        vp = padded_vocab(cfg)
+        if vp != cfg.vocab_size:
+            logits = jnp.where(
+                (jnp.arange(vp) < cfg.vocab_size)[None, None, :], logits, -1e30
+            )
+        cache = {**cache, "pos": pos + 1}
+        return logits, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# cache-building prefill (unrolled layers; small-scale serving + tests)
+# ---------------------------------------------------------------------------
+def prefill_with_cache(params, tokens, cfg: ModelConfig, mesh, max_len: int):
+    """Run the prompt through the model, returning (last-token logits, cache
+    positioned at prompt length).  Python-unrolled layers so per-layer KV can
+    be captured without restructuring the scan."""
+    from repro.serve.kvcache import init_cache
+    from repro.models.attention import mla_attention, gqa_attention
+    from repro.models.layers import rmsnorm
+
+    B, S = tokens.shape
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, max_len, mesh)
+    nl = cfg.num_layers
+    shared = params.get("shared")
+    every = cfg.shared_attn_every
+
+    for i in range(nl):
+        lp = jax.tree.map(lambda a: a[i], params["blocks"])
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.family in ("ssm", "hybrid"):
+            from repro.models.mamba import mamba_prefill
+            y, st = mamba_prefill(h, lp["mamba"], cfg, mesh)
+            x = x + y
+            for k in ("conv_x", "conv_bc", "ssm"):
+                cache[k] = cache[k].at[i].set(st[k])
+            if cfg.family == "hybrid" and (i % every) == (every - 1):
+                inv = i // every
+                h = rmsnorm(x, shared["ln1"], cfg.norm_eps)
+                o, kf, vf = _attn_with_kv(h, shared["attn"], cfg, mesh, positions)
+                x = x + o
+                cache["sk"] = jax.lax.dynamic_update_slice(
+                    cache["sk"], kf[None], (inv, 0, 0, 0, 0))
+                cache["sv"] = jax.lax.dynamic_update_slice(
+                    cache["sv"], vf[None], (inv, 0, 0, 0, 0))
+                h = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+                x = x + L.swiglu_mlp(
+                    h, shared["mlp"], mesh=mesh,
+                    dp=L.dp_axes(mesh) if mesh else ("data",))
+        elif cfg.attn == "mla":
+            o, ck, kr = _mla_with_kv(h, lp["attn"], cfg, mesh, positions)
+            x = x + o
+            cache["c_kv"] = jax.lax.dynamic_update_slice(
+                cache["c_kv"], ck[None], (i, 0, 0, 0))
+            cache["k_rope"] = jax.lax.dynamic_update_slice(
+                cache["k_rope"], kr[None], (i, 0, 0, 0))
+            x, _ = _ffn_decode(x, lp, cfg, mesh, jnp.zeros((), jnp.float32))
+        else:
+            o, kf, vf = _attn_with_kv(h, lp["attn"], cfg, mesh, positions)
+            x = x + o
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], kf[None], (i, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], vf[None], (i, 0, 0, 0, 0))
+            x, _ = _ffn_decode(x, lp, cfg, mesh, jnp.zeros((), jnp.float32))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x[:, -1:], params["lm_head"].astype(x.dtype)
+    ).astype(jnp.float32)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:
+        logits = jnp.where(
+            (jnp.arange(vp) < cfg.vocab_size)[None, None, :], logits, -1e30
+        )
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def _attn_with_kv(x, p, cfg, mesh, positions):
+    """GQA attention that also returns padded (k, v) for the cache."""
+    from repro.models.layers import rope, chunked_attention
+    from repro.models.attention import _qkv_proj
+
+    B, S, _ = x.shape
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _qkv_proj(x, p, cfg)
+    q = rope(q.reshape(B, S, H, D), positions, cfg.rope_theta)
+    k = rope(k.reshape(B, S, KH, D), positions, cfg.rope_theta)
+    v = v.reshape(B, S, KH, D)
+    o = chunked_attention(q, k, v, causal=cfg.causal)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * D), p["wo"].astype(x.dtype))
+    return o, k, v
+
+
+def _mla_with_kv(x, p, cfg, mesh, positions):
+    """MLA attention returning (out, c_kv, k_rope) for the latent cache."""
+    from repro.models.layers import rope, chunked_attention, rmsnorm
+
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    if cfg.q_lora_rank:
+        cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+                     p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv = rmsnorm(ckv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(ckv[..., r:][:, :, None, :], positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, p["wk_b"].astype(x.dtype)).reshape(B, S, H, dn)
+    v = jnp.einsum("bsr,rh->bsh", c_kv, p["wv_b"].astype(x.dtype)).reshape(B, S, H, dv)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    if dv < dn + dr:
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    else:
+        v_pad = v
+    o = chunked_attention(q_full, k_full, v_pad, causal=cfg.causal)[..., :dv]
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * dv), p["wo"].astype(x.dtype))
+    return o, c_kv, k_rope[:, :, 0, :]

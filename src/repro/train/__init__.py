@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, init_opt_state, adamw_update
+from repro.train.train_step import TrainConfig, make_train_step

@@ -1,0 +1,65 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+At multi-pod scale the pod-level gradient sync crosses DCN, the slowest
+link; 4x compression there is the standard distributed-optimization trick.
+Two pieces:
+
+* ``compressed_psum`` — the actual collective: quantize (block-int8, absmax
+  scales) -> psum the int32-accumulated codes + scales over the named axis
+  -> dequantize.  Exposed for shard_map use and unit-tested on a virtual
+  8-device axis.
+* ``ef_compress`` — error-feedback wrapper used inside train_step: the
+  quantization residual is carried in the optimizer state and re-added next
+  step, so the compression bias vanishes asymptotically (Karimireddy et al.
+  2019).  Numerically this is exactly what the compressed pod-sync does to
+  the gradients; the wire-format saving itself is a deployment property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import BLOCK, dequantize_block_int8, quantize_block_int8
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Quantize-then-psum over a named axis (for use inside shard_map).
+
+    A SHARED per-block scale (pmax of local absmaxes — a tiny metadata
+    collective, <1% of payload) makes the int8 codes directly summable:
+    psum the int32-accumulated codes, then dequantize once.  Error is pure
+    quantization noise (<= absmax/127 per element), no scale-mismatch bias."""
+    shape = x.shape
+    pad = (-shape[-1]) % BLOCK
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(shape[:-1] + (-1, BLOCK))
+    local_max = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jax.lax.pmax(local_max, axis_name) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int32)
+    codes = jax.lax.psum(q, axis_name)
+    out = (codes.astype(jnp.float32) * scale).reshape(xp.shape)[..., : shape[-1]]
+    return out.astype(x.dtype)
+
+
+def ef_compress(grads, residuals):
+    """Error-feedback int8 round-trip: returns (decompressed grads, new
+    residuals).  residuals pytree matches grads (f32)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q = quantize_block_int8(g32)
+        deq = dequantize_block_int8(q, g32.shape)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

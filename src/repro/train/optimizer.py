@@ -1,0 +1,121 @@
+"""AdamW in raw JAX with optional 8-bit (block-quantized) moments.
+
+Optimizer state inherits the parameter sharding (ZeRO: m/v live sharded over
+(data, model) exactly like their parameter), so optimizer memory scales down
+with the mesh.  The 8-bit mode stores m and v as int8 codes with per-block
+(block=256 along the last axis) absmax scales — the dynamic-range trick of
+8-bit Adam [Dettmers 2021], which is what brings the 1T-param MoE's
+optimizer bytes within reach (EXPERIMENTS.md section Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 32          # 32 (f32 moments) or 8 (block-int8)
+    warmup_steps: int = 100
+
+
+# ---------------------------------------------------------------------------
+# block int8 quantization
+# ---------------------------------------------------------------------------
+def _blocked_shape(shape):
+    last = shape[-1] if shape else 1
+    return shape[:-1] + (-(-last // BLOCK),)
+
+
+def quantize_block_int8(x: jnp.ndarray) -> dict:
+    shape = x.shape
+    last = shape[-1]
+    pad = (-last) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(shape[:-1] + (-1, BLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(xp.shape), "scale": scale[..., 0].astype(jnp.float32)}
+
+
+def dequantize_block_int8(state: dict, shape) -> jnp.ndarray:
+    q = state["q"].astype(jnp.float32)
+    qb = q.reshape(shape[:-1] + (-1, BLOCK))
+    x = qb * state["scale"][..., None]
+    return x.reshape(q.shape)[..., : shape[-1]]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def init_opt_state(params, cfg: OptConfig):
+    def init_leaf(p):
+        if cfg.state_bits == 8:
+            z = jnp.zeros(p.shape, jnp.float32)
+            return {"m": quantize_block_int8(z), "v": quantize_block_int8(z)}
+        return {"m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "moments": jax.tree.map(init_leaf, params),
+    }
+
+
+def _lr_schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / cfg.warmup_steps, 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptConfig):
+    """-> (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mom):
+        g = g.astype(jnp.float32) * clip
+        if cfg.state_bits == 8:
+            m = dequantize_block_int8(mom["m"], p.shape)
+            v = dequantize_block_int8(mom["v"], p.shape)
+        else:
+            m, v = mom["m"], mom["v"]
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        if cfg.state_bits == 8:
+            new_mom = {"m": quantize_block_int8(m), "v": quantize_block_int8(v)}
+        else:
+            new_mom = {"m": m, "v": v}
+        return new_p.astype(p.dtype), new_mom
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(opt_state["moments"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_moments = jax.tree.unflatten(treedef, [o[1] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"step": step, "moments": new_moments}, metrics

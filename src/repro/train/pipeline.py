@@ -1,0 +1,72 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis (optional
+module — the assigned production mesh has no stage axis, so PP is exercised
+in tests only; the data axis can be re-folded into (stage, data) when a
+deployment wants depth partitioning; see DESIGN.md §5).
+
+Schedule: classic GPipe fill-drain.  With S stages and M microbatches the
+loop runs T = M + S - 1 ticks; at every tick each stage applies its layer
+slice to the activation it holds and forwards the result to stage s+1 via
+``lax.ppermute`` — the canonical point-to-point pipeline collective.
+Bubble fraction = (S-1)/T, the standard GPipe overhead.
+
+The whole schedule is a static python loop inside one shard_map, so XLA
+sees a fixed sequence of compute + collective-permute ops it can overlap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, mesh: Mesh,
+                   axis: str = "stage"):
+    """Run microbatches through a linear pipeline of stages.
+
+    stage_fn: (params_slice, x [mb, ...]) -> y [mb, ...] (same shape).
+    stage_params: pytree with leading [n_stages] dim (stage s owns slice s).
+    x_micro: [n_micro, mb, ...] microbatched input.
+    Returns [n_micro, mb, ...] outputs (replicated over the stage axis).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def shard_fn(params_local, x_all):
+        s = jax.lax.axis_index(axis)
+        params_me = jax.tree.map(lambda a: a[0], params_local)
+        buf = jnp.zeros_like(x_all[0])  # activation held by this stage
+        out = jnp.zeros_like(x_all)
+
+        for t in range(ticks):
+            mb = t - s  # microbatch index this stage works on at tick t
+            # stage 0 injects a fresh microbatch; others use the buffer
+            inj = x_all[jnp.clip(t, 0, n_micro - 1)]
+            inp = jnp.where(s == 0, inj, buf)
+            y = stage_fn(params_me, inp)
+            valid = (mb >= 0) & (mb < n_micro)
+            y = jnp.where(valid, y, jnp.zeros_like(y))
+            # last stage writes its finished microbatch into the output
+            is_last = s == n_stages - 1
+            write_idx = jnp.clip(mb, 0, n_micro - 1)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out,
+                jnp.where(valid & is_last, y, out[write_idx]),
+                write_idx, 0,
+            )
+            # hand activations downstream
+            buf = jax.lax.ppermute(y, axis, perm)
+        # outputs live on the last stage only; replicate for the caller
+        return jax.lax.psum(
+            jnp.where(s == n_stages - 1, out, jnp.zeros_like(out)), axis
+        )
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stage_params, x_micro)

@@ -1,0 +1,37 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+# Tests run on the default single CPU device; multi-device tests spawn
+# subprocesses with XLA_FLAGS (dryrun.py is the only in-process user of
+# forced host device counts, and it is never imported here).
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
+    """Run a python snippet under a forced host-device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture
+def smoke_mesh():
+    import jax
+
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,156 @@
+"""Checkpointing: atomic roundtrip, corruption tolerance, async writer,
+resume determinism, elastic resharding onto a different device count."""
+import json
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.train.checkpoint import (
+    AsyncCheckpointer, latest_step, restore_checkpoint, save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32)),
+            "blocks": {"a": jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))},
+        },
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 7, tree)
+    assert latest_step(tmp_path) == 7
+    out = restore_checkpoint(tmp_path, 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_manifest_ignored(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 5, tree)
+    # simulate a crash mid-write at step 9: files but no manifest
+    broken = tmp_path / "step_0000000009"
+    (broken / "arrays").mkdir(parents=True)
+    np.save(broken / "arrays" / "params.w.npy", np.zeros((8, 16)))
+    assert latest_step(tmp_path) == 5  # the torn checkpoint is invisible
+
+
+def test_orphan_tmp_garbage_collected(tmp_path):
+    tree = _tree()
+    orphan = tmp_path / ".tmp_step_0000000001_123"
+    orphan.mkdir(parents=True)
+    save_checkpoint(tmp_path, 2, tree)
+    assert not orphan.exists()
+
+
+def test_keep_last_k(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_0000000004", "step_0000000005"]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 1, tree)
+    bad = {
+        "params": {"w": jnp.zeros((9, 16)), "blocks": {"a": jnp.zeros((4, 8))}},
+        "opt": {"step": jnp.asarray(0, jnp.int32)},
+    }
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(tmp_path, 1, bad)
+
+
+def test_async_checkpointer(tmp_path):
+    tree = _tree()
+    ck = AsyncCheckpointer(tmp_path)
+    ck.save(3, tree)
+    ck.wait()
+    assert latest_step(tmp_path) == 3
+    out = restore_checkpoint(tmp_path, 3, tree)
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+
+
+def test_resume_determinism(tmp_path, smoke_mesh):
+    """train(10) == train(5) -> checkpoint -> resume -> train(5)."""
+    from repro.configs.base import ModelConfig, ShapeConfig
+    from repro.launch.inputs import make_inputs
+    from repro.models.model import init_params
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import TrainConfig, make_train_state, make_train_step
+    from repro.data.tokens import TokenDataset, synthetic_corpus
+
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=128, attn="gqa",
+    )
+    corpus, _ = synthetic_corpus(64, 33, cfg.vocab_size, seed=0)
+    ds = TokenDataset(corpus, global_batch=4, seed=0)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3))
+
+    def run(n_steps, start_params, start_state, start=0):
+        step = jax.jit(make_train_step(cfg, tcfg, smoke_mesh))
+        p, s = start_params, start_state
+        for i in range(start, n_steps):
+            p, s, _ = step(p, s, ds.batch(i))
+        return p, s
+
+    p0 = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    s0 = make_train_state(p0, tcfg)
+    pa, _ = run(10, p0, s0)
+
+    pb, sb = run(5, p0, s0)
+    save_checkpoint(tmp_path, 5, {"params": pb, "state": sb})
+    rest = restore_checkpoint(tmp_path, 5, {"params": pb, "state": sb})
+    pc, _ = run(10, rest["params"], rest["state"], start=5)
+
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+ELASTIC_CODE = r"""
+import jax, jax.numpy as jnp, numpy as np, sys
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+ckpt_dir = sys.argv[1] if len(sys.argv) > 1 else "%CKPT%"
+n = len(jax.devices())
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+step = latest_step(ckpt_dir)
+if step is None:
+    # phase 1 (8 devices): shard, save
+    sh = NamedSharding(mesh, P("data", None))
+    tree = {"w": jax.device_put(tree["w"], sh)}
+    save_checkpoint(ckpt_dir, 1, tree)
+    print("SAVED", n)
+else:
+    # phase 2 (different device count): restore + reshard
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out = restore_checkpoint(ckpt_dir, step, tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(64, dtype=np.float32).reshape(8, 8))
+    assert out["w"].sharding.num_devices == n
+    print("RESTORED", n)
+"""
+
+
+def test_elastic_reshard_across_device_counts(tmp_path):
+    code = ELASTIC_CODE.replace("%CKPT%", str(tmp_path))
+    out1 = run_subprocess(code, devices=8)
+    assert "SAVED 8" in out1
+    out2 = run_subprocess(code, devices=2)   # simulate losing 6 hosts
+    assert "RESTORED 2" in out2

@@ -1,0 +1,78 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.communities import (
+    components_as_sets, connected_components, maximal_cliques, pairs_to_set,
+    qa1, qa2,
+)
+from repro.core.types import PAD_ID
+
+
+def union_find_components(n, edges):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in edges:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+    groups = {}
+    for i in range(n):
+        groups.setdefault(find(i), set()).add(i)
+    return {frozenset(g) for g in groups.values() if len(g) >= 2}
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    edges=st.lists(st.tuples(st.integers(0, 39), st.integers(0, 39)), max_size=80),
+)
+def test_cc_matches_union_find(n, edges):
+    edges = [(a % n, b % n) for a, b in edges if a % n != b % n]
+    cap = max(len(edges), 1)
+    left = np.full(cap, PAD_ID, np.int32)
+    right = np.full(cap, PAD_ID, np.int32)
+    for i, (a, b) in enumerate(edges):
+        left[i], right[i] = a, b
+    labels = connected_components(
+        jnp.asarray(left), jnp.asarray(right), num_nodes=n
+    )
+    got = components_as_sets(np.asarray(labels))
+    assert got == union_find_components(n, edges)
+
+
+def test_maximal_cliques_triangle_plus_edge():
+    edges = [(0, 1), (1, 2), (0, 2), (2, 3)]
+    cliques = maximal_cliques(edges)
+    assert cliques == {frozenset({0, 1, 2}), frozenset({2, 3})}
+
+
+def test_maximal_cliques_k4():
+    import itertools
+
+    edges = list(itertools.combinations(range(4), 2))
+    assert maximal_cliques(edges) == {frozenset({0, 1, 2, 3})}
+
+
+def test_qa_metrics():
+    cen = {frozenset({1, 2}), frozenset({3, 4, 5})}
+    dis_perfect = set(cen)
+    dis_half = {frozenset({1, 2})}
+    assert qa1(dis_perfect, cen) == 1.0
+    assert qa1(dis_half, cen) == 0.5
+    p_cen = {(1, 2), (3, 4)}
+    assert qa2({(1, 2)}, p_cen) == 0.5
+    assert qa2(p_cen, p_cen) == 1.0
+    assert qa1(set(), set()) == 1.0
+
+
+def test_pairs_to_set_ignores_padding():
+    left = jnp.asarray([2, PAD_ID, 5], jnp.int32)
+    right = jnp.asarray([1, PAD_ID, 7], jnp.int32)
+    assert pairs_to_set(left, right) == {(1, 2), (5, 7)}

@@ -1,0 +1,67 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoding import (
+    PAD_CODE_A, SemanticForest, encode_batch, forest_tables,
+    make_random_forest, type_codes,
+)
+from repro.core.types import PAD_PLACE, TrajectoryBatch
+
+
+def make_batch(places, lengths):
+    places = np.asarray(places, np.int32)
+    return TrajectoryBatch(
+        places=jnp.asarray(places),
+        lengths=jnp.asarray(np.asarray(lengths, np.int32)),
+        user_id=jnp.arange(places.shape[0], dtype=jnp.int32),
+    )
+
+
+def test_forest_sizes_and_surjectivity():
+    f = make_random_forest(30, 10, 10_000, seed=0)
+    assert f.sizes == (30, 300, 10_000)
+    maps = f.level_maps()
+    assert len(maps) == 3
+    # every type and class appears (surjective parents)
+    assert set(maps[0].tolist()) == set(range(30))
+    assert set(maps[1].tolist()) == set(range(300))
+
+
+@pytest.mark.parametrize("n_levels", [2, 3, 4, 5, 6])
+def test_forest_n_levels(n_levels):
+    f = make_random_forest(30, 10, 5_000, n_levels=n_levels, seed=1)
+    assert f.num_levels == n_levels
+    assert f.sizes[0] == 30 and f.sizes[-1] == 5_000
+    maps = f.level_maps()
+    assert len(maps) == n_levels
+    # coarse levels are functions of fine levels (tree consistency)
+    for l in range(n_levels - 1):
+        via_parent = f.parents[l][maps[l + 1]]
+        np.testing.assert_array_equal(via_parent, maps[l])
+
+
+def test_encode_batch_matches_manual():
+    f = make_random_forest(5, 3, 50, seed=2)
+    tables = forest_tables(f)
+    places = [[3, 7, 3, PAD_PLACE], [10, 11, 12, 13]]
+    batch = make_batch(places, [3, 4])
+    enc = encode_batch(batch, tables)
+    assert enc.codes.shape == (2, 3, 4)
+    maps = f.level_maps()
+    for lvl in range(3):
+        assert int(enc.codes[0, lvl, 0]) == int(maps[lvl][3])
+        assert int(enc.codes[0, lvl, 1]) == int(maps[lvl][7])
+    # padding gets the sentinel at every level
+    assert (np.asarray(enc.codes[0, :, 3]) == PAD_CODE_A).all()
+    # repetition preserved: same place -> same code
+    assert int(enc.codes[0, 0, 0]) == int(enc.codes[0, 0, 2])
+
+
+def test_type_codes_view():
+    f = make_random_forest(5, 3, 50, seed=3)
+    batch = make_batch([[1, 2, 3, 4]], [4])
+    enc = encode_batch(batch, forest_tables(f))
+    tc = type_codes(enc)
+    assert tc.shape == (1, 4)
+    assert (np.asarray(tc) < 5).all()

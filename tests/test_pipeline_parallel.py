@@ -1,0 +1,39 @@
+"""GPipe pipeline parallelism == sequential stage application (4 virtual
+pipeline stages, subprocess)."""
+from conftest import run_subprocess
+
+CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.train.pipeline import pipeline_apply
+
+n_stages, n_micro, mb, d = 4, 6, 2, 16
+mesh = jax.make_mesh((n_stages,), ("stage",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+Ws = jnp.asarray(rng.normal(scale=0.3, size=(n_stages, d, d)).astype(np.float32))
+bs = jnp.asarray(rng.normal(scale=0.1, size=(n_stages, d)).astype(np.float32))
+x = jnp.asarray(rng.normal(size=(n_micro, mb, d)).astype(np.float32))
+
+def stage_fn(p, h):
+    W, b = p
+    return jnp.tanh(h @ W + b)
+
+out = pipeline_apply(stage_fn, (Ws, bs), x, mesh)
+
+# oracle: apply all stages sequentially to every microbatch
+ref = x
+for s in range(n_stages):
+    ref = jnp.tanh(ref @ Ws[s] + bs[s])
+err = float(jnp.max(jnp.abs(out - ref)))
+assert err < 1e-5, err
+# differentiability through the pipeline (grads flow via ppermute transpose)
+loss = lambda Ws: (pipeline_apply(stage_fn, (Ws, bs), x, mesh) ** 2).sum()
+g = jax.grad(loss)(Ws)
+assert jnp.isfinite(g).all() and float(jnp.abs(g).max()) > 0
+print("OK", err)
+"""
+
+
+def test_gpipe_matches_sequential():
+    out = run_subprocess(CODE, devices=4)
+    assert "OK" in out

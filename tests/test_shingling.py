@@ -1,0 +1,81 @@
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.shingling import (
+    expected_collision_rate, num_shingles, pack_keys, shingle_indices,
+    shingles_from_types,
+)
+from repro.core.types import PAD_KEY
+
+
+def brute_force_shingles(types, k, Q):
+    """Oracle: distinct order-preserving k-subsequences, base-Q packed."""
+    out = set()
+    for combo in itertools.combinations(types, k):
+        key = 0
+        for c in combo:
+            key = key * Q + c
+        out.add(key)
+    return out
+
+
+@pytest.mark.parametrize("k,Q,L", [(3, 30, 10), (3, 300, 8), (2, 10, 6), (4, 30, 9)])
+def test_shingles_match_bruteforce(k, Q, L):
+    rng = np.random.default_rng(0)
+    n = 50
+    lengths = rng.integers(k, L + 1, size=n).astype(np.int32)
+    types = rng.integers(0, Q, size=(n, L)).astype(np.int32)
+    keys = np.asarray(
+        shingles_from_types(jnp.asarray(types), jnp.asarray(lengths), k=k, num_types=Q)
+    )
+    for i in range(n):
+        got = set(keys[i][keys[i] != PAD_KEY].tolist())
+        want = brute_force_shingles(types[i, : lengths[i]].tolist(), k, Q)
+        assert got == want
+
+
+def test_shingle_count_is_binomial():
+    from math import comb
+
+    assert num_shingles(10, 3) == comb(10, 3)
+    assert shingle_indices(10, 3).shape == (comb(10, 3), 3)
+    # indices strictly increasing
+    idx = shingle_indices(10, 3)
+    assert (np.diff(idx, axis=1) > 0).all()
+
+
+def test_pack_keys_bijective():
+    Q, k = 30, 3
+    codes = np.stack(
+        np.meshgrid(*[np.arange(Q)] * k, indexing="ij"), axis=-1
+    ).reshape(-1, k)[:5000]
+    keys = np.asarray(pack_keys(jnp.asarray(codes), Q))
+    assert len(set(keys.tolist())) == len(keys)  # perfect hash
+
+
+def test_pack_overflow_guard():
+    with pytest.raises(ValueError):
+        pack_keys(jnp.zeros((1, 4), jnp.int32), 2000)  # 2000^4 > 2^31
+
+
+def test_collision_rate_model():
+    """Paper section IV.2: collision rate ~ C(L,k)/Q^k; empirically the
+    fraction of populated buckets tracks the model's order of magnitude."""
+    from math import comb
+
+    rate = expected_collision_rate(8, 3, 30)
+    assert rate == comb(8, 3) / 30**3
+    rng = np.random.default_rng(1)
+    n, L, Q = 2000, 8, 30
+    types = rng.integers(0, Q, size=(n, L)).astype(np.int32)
+    lengths = np.full(n, L, np.int32)
+    keys = np.asarray(
+        shingles_from_types(jnp.asarray(types), jnp.asarray(lengths), k=3, num_types=Q)
+    )
+    valid = keys[keys != PAD_KEY]
+    distinct_frac = len(np.unique(valid)) / Q**3
+    # every trajectory contributes ~C(L,3)/Q^3 of the key space
+    assert 0.1 * rate * n > 0 and distinct_frac < min(1.0, rate * n)

@@ -1,0 +1,117 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
+from repro.core.similarity import (
+    default_betas, lcs_ref, lcs_wavefront, mss_scores, multi_level_lcs, repad,
+)
+
+
+def py_lcs(a, b):
+    la, lb = len(a), len(b)
+    dp = [[0] * (lb + 1) for _ in range(la + 1)]
+    for i in range(1, la + 1):
+        for j in range(1, lb + 1):
+            dp[i][j] = (
+                dp[i - 1][j - 1] + 1
+                if a[i - 1] == b[j - 1]
+                else max(dp[i - 1][j], dp[i][j - 1])
+            )
+    return dp[la][lb]
+
+
+def _pad(seqs, L, pad):
+    out = np.full((len(seqs), L), pad, np.int32)
+    for i, s in enumerate(seqs):
+        out[i, : len(s)] = s
+    return jnp.asarray(out)
+
+
+@pytest.mark.parametrize("impl", [lcs_ref, lcs_wavefront])
+def test_lcs_against_python(impl):
+    rng = np.random.default_rng(0)
+    L = 12
+    seqs_a = [rng.integers(0, 5, size=rng.integers(1, L + 1)).tolist() for _ in range(64)]
+    seqs_b = [rng.integers(0, 5, size=rng.integers(1, L + 1)).tolist() for _ in range(64)]
+    a = _pad(seqs_a, L, PAD_CODE_A)
+    b = _pad(seqs_b, L, PAD_CODE_B)
+    got = np.asarray(impl(a, b))
+    want = np.array([py_lcs(x, y) for x, y in zip(seqs_a, seqs_b)])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    a=st.lists(st.integers(0, 4), min_size=0, max_size=10),
+    b=st.lists(st.integers(0, 4), min_size=0, max_size=10),
+)
+def test_lcs_wavefront_property(a, b):
+    L = 10
+    pa = _pad([a], L, PAD_CODE_A)
+    pb = _pad([b], L, PAD_CODE_B)
+    got = int(lcs_wavefront(pa, pb)[0])
+    assert got == py_lcs(a, b)
+    # invariants
+    assert got <= min(len(a), len(b))
+    if a == b:
+        assert got == len(a)
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=st.lists(st.integers(0, 3), min_size=1, max_size=8),
+       x=st.integers(0, 3))
+def test_lcs_monotone_under_append(a, x):
+    """LCS(a, a+[x]) == len(a) -- appending never reduces the match."""
+    L = 9
+    pa = _pad([a], L, PAD_CODE_A)
+    pb = _pad([a + [x]], L, PAD_CODE_B)
+    assert int(lcs_wavefront(pa, pb)[0]) == len(a)
+
+
+def test_multi_level_hierarchy_monotonicity():
+    """|M_typ| >= |M_cls| >= |M_p| (paper section IV.3): coarser levels can
+    only match MORE, because levels are tree-consistent."""
+    rng = np.random.default_rng(1)
+    P, L = 128, 10
+    # build tree-consistent random codes: place -> class = p//4 -> type = p//16
+    pa = rng.integers(0, 64, size=(P, L)).astype(np.int32)
+    pb = rng.integers(0, 64, size=(P, L)).astype(np.int32)
+    la = rng.integers(1, L + 1, size=P).astype(np.int32)
+    lb = rng.integers(1, L + 1, size=P).astype(np.int32)
+    codes_a = np.stack([pa // 16, pa // 4, pa], axis=1)
+    codes_b = np.stack([pb // 16, pb // 4, pb], axis=1)
+    lv = np.asarray(
+        multi_level_lcs(jnp.asarray(codes_a), jnp.asarray(la),
+                        jnp.asarray(codes_b), jnp.asarray(lb))
+    )
+    assert (lv[:, 0] >= lv[:, 1]).all()
+    assert (lv[:, 1] >= lv[:, 2]).all()
+
+
+def test_paper_fig6_example():
+    """The worked example: |M_typ|=7, |M_cls|=3, |M_p|=1 with betas
+    (0.2, 0.3, 0.5) gives MSS = 2.8."""
+    lv = jnp.asarray([[7, 3, 1]], jnp.int32)
+    betas = jnp.asarray([0.2, 0.3, 0.5], jnp.float32)
+    assert float(mss_scores(lv, betas)[0]) == pytest.approx(2.8)
+
+
+def test_repetition_awareness():
+    """Frequent flyer vs occasional traveler: repeated visits raise the
+    similarity only when BOTH trajectories repeat (the paper's key point
+    against set-based similarity)."""
+    L = 8
+    freq_a = _pad([[1, 2, 1, 2, 1, 2]], L, PAD_CODE_A)
+    freq_b = _pad([[1, 2, 1, 2, 1, 2]], L, PAD_CODE_B)
+    once_b = _pad([[1, 2]], L, PAD_CODE_B)
+    assert int(lcs_wavefront(freq_a, freq_b)[0]) == 6
+    assert int(lcs_wavefront(freq_a, once_b)[0]) == 2  # set-based would say "same"
+
+
+def test_repad():
+    x = jnp.asarray(np.arange(12, dtype=np.int32).reshape(2, 6))
+    out = repad(x, jnp.asarray([2, 6], jnp.int32), -7)
+    assert np.asarray(out)[0].tolist() == [0, 1, -7, -7, -7, -7]
+    assert np.asarray(out)[1].tolist() == [6, 7, 8, 9, 10, 11]

@@ -1,0 +1,99 @@
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ssh import dedup_pairs, exact_pair_count, pairs_from_rows, ssh_candidates
+from repro.core.types import PAD_ID, PAD_KEY
+
+
+def brute_force_join(keys_2d):
+    """Oracle: all unordered trajectory pairs sharing >=1 key."""
+    n = keys_2d.shape[0]
+    sets = [set(r[r != PAD_KEY].tolist()) for r in keys_2d]
+    out = set()
+    for i, j in itertools.combinations(range(n), 2):
+        if sets[i] & sets[j]:
+            out.add((i, j))
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_join_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    n, s = 60, 12
+    keys = rng.integers(0, 40, size=(n, s)).astype(np.int32)
+    # dedup per row + pad like the shingler does
+    for i in range(n):
+        row = np.unique(keys[i])
+        keys[i] = PAD_KEY
+        keys[i, : len(row)] = row
+    cand = ssh_candidates(jnp.asarray(keys), pair_capacity=1 << 14)
+    got = {
+        (int(a), int(b))
+        for a, b in zip(np.asarray(cand.left), np.asarray(cand.right))
+        if a != PAD_ID
+    }
+    assert int(cand.overflow) == 0
+    assert got == brute_force_join(keys)
+    assert int(cand.count) == len(got)
+
+
+def test_exact_pair_count():
+    keys = np.array([[1, 2], [1, 3], [1, 4], [5, PAD_KEY]], np.int32)
+    # key 1 shared by rows 0,1,2 -> C(3,2)=3 raw pairs
+    assert exact_pair_count(jnp.asarray(keys)) == 3
+
+
+def test_overflow_reported_not_silent():
+    keys = np.full((40, 1), 7, np.int32)  # one run of 40 -> 780 pairs
+    cand = ssh_candidates(jnp.asarray(keys), pair_capacity=128)
+    assert int(cand.overflow) == 780 - 128
+
+
+def test_pair_dedup_scores_once():
+    """Two trajectories sharing MANY shingles must appear exactly once
+    (paper section IV.3: 'calculated only once')."""
+    keys = np.array([[10, 11, 12, 13], [10, 11, 12, 13]], np.int32)
+    cand = ssh_candidates(jnp.asarray(keys), pair_capacity=64)
+    valid = np.asarray(cand.left) != PAD_ID
+    assert valid.sum() == 1
+    assert int(cand.count) == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.lists(
+        st.lists(st.integers(0, 8), min_size=1, max_size=5),
+        min_size=2, max_size=24,
+    )
+)
+def test_join_property(data):
+    n = len(data)
+    s = 5
+    keys = np.full((n, s), PAD_KEY, np.int32)
+    for i, row in enumerate(data):
+        u = sorted(set(row))
+        keys[i, : len(u)] = u
+    cand = ssh_candidates(jnp.asarray(keys), pair_capacity=1 << 12)
+    got = {
+        (int(a), int(b))
+        for a, b in zip(np.asarray(cand.left), np.asarray(cand.right))
+        if a != PAD_ID
+    }
+    assert got == brute_force_join(keys)
+
+
+def test_dedup_pairs_idempotent_and_canonical():
+    lo = jnp.asarray([5, 1, 5, PAD_ID, 2], jnp.int32)
+    hi = jnp.asarray([3, 2, 3, PAD_ID, 2], jnp.int32)  # (2,2) self-pair dropped
+    out = dedup_pairs(jnp.minimum(lo, hi), jnp.maximum(lo, hi))
+    pairs = {
+        (int(a), int(b))
+        for a, b in zip(np.asarray(out.left), np.asarray(out.right))
+        if a != PAD_ID
+    }
+    assert pairs == {(1, 2), (3, 5)}
+    assert int(out.count) == 2

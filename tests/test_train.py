@@ -1,0 +1,141 @@
+"""Training substrate: loss decreases, grad-accum equivalence, 8-bit
+optimizer, EF gradient compression, straggler watchdog."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.inputs import make_inputs
+from repro.models.model import init_params
+from repro.train.optimizer import (
+    OptConfig, adamw_update, dequantize_block_int8, init_opt_state,
+    quantize_block_int8,
+)
+from repro.train.compression import ef_compress, init_residuals
+from repro.train.straggler import StragglerWatchdog
+from repro.train.train_step import TrainConfig, make_train_state, make_train_step
+
+TINY = ModelConfig(
+    name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256, attn="gqa",
+)
+SHAPE = ShapeConfig("t", 32, 8, "train")
+
+
+def _fixed_batch(seed=0):
+    return make_inputs(TINY, SHAPE, seed=seed)
+
+
+def test_loss_decreases(smoke_mesh):
+    params = init_params(TINY, jax.random.PRNGKey(0), dtype=jnp.float32)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=5))
+    state = make_train_state(params, tcfg)
+    step = jax.jit(make_train_step(TINY, tcfg, smoke_mesh), donate_argnums=(0, 1))
+    batch = _fixed_batch()
+    losses = []
+    for _ in range(30):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0, losses[::10]
+
+
+def test_grad_accum_equivalence(smoke_mesh):
+    """accum=1 vs accum=4 produce (nearly) identical updates."""
+    params = init_params(TINY, jax.random.PRNGKey(1), dtype=jnp.float32)
+    batch = _fixed_batch()
+    outs = {}
+    for accum in (1, 4):
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-3), grad_accum=accum)
+        state = make_train_state(params, tcfg)
+        step = jax.jit(make_train_step(TINY, tcfg, smoke_mesh))
+        p2, _, m = step(params, state, batch)
+        outs[accum] = p2
+    flat1 = jnp.concatenate([x.ravel() for x in jax.tree.leaves(outs[1])])
+    flat4 = jnp.concatenate([x.ravel() for x in jax.tree.leaves(outs[4])])
+    assert float(jnp.max(jnp.abs(flat1 - flat4))) < 1e-4
+
+
+def test_block_int8_roundtrip():
+    rng = np.random.default_rng(0)
+    for shape in [(7,), (300,), (4, 515), (3, 2, 256)]:
+        x = (rng.normal(size=shape) * rng.uniform(0.01, 10)).astype(np.float32)
+        q = quantize_block_int8(jnp.asarray(x))
+        deq = np.asarray(dequantize_block_int8(q, shape))
+        assert deq.shape == shape
+        blockmax = np.abs(x).max()
+        assert np.abs(deq - x).max() <= blockmax / 127.0 * 1.01
+
+
+def test_adamw_8bit_close_to_fp32(smoke_mesh):
+    params = init_params(TINY, jax.random.PRNGKey(2), dtype=jnp.float32)
+    grads = jax.tree.map(
+        lambda p: jnp.asarray(
+            np.random.default_rng(0).normal(size=p.shape, scale=0.01), p.dtype
+        ),
+        params,
+    )
+    outs = {}
+    for bits in (32, 8):
+        cfg = OptConfig(lr=1e-3, state_bits=bits)
+        st = init_opt_state(params, cfg)
+        p2, st2, _ = adamw_update(params, grads, st, cfg)
+        outs[bits] = p2
+    f32 = jnp.concatenate([x.ravel() for x in jax.tree.leaves(outs[32])])
+    f8 = jnp.concatenate([x.ravel() for x in jax.tree.leaves(outs[8])])
+    base = jnp.concatenate([x.ravel() for x in jax.tree.leaves(params)])
+    upd32 = f32 - base
+    upd8 = f8 - base
+    # updates agree in direction and magnitude within quantization noise
+    cos = float(jnp.sum(upd32 * upd8) / (jnp.linalg.norm(upd32) * jnp.linalg.norm(upd8) + 1e-12))
+    assert cos > 0.98, cos
+
+
+def test_ef_compression_bias_vanishes():
+    """Error feedback: the RUNNING SUM of decompressed grads tracks the true
+    sum (compression bias does not accumulate)."""
+    rng = np.random.default_rng(3)
+    g_true_sum = np.zeros((1000,), np.float32)
+    g_seen_sum = np.zeros((1000,), np.float32)
+    grads = {"w": jnp.zeros((1000,), jnp.float32)}
+    resid = init_residuals(grads)
+    for step in range(50):
+        g = rng.normal(size=1000).astype(np.float32) * 0.1
+        g_true_sum += g
+        out, resid = ef_compress({"w": jnp.asarray(g)}, resid)
+        g_seen_sum += np.asarray(out["w"])
+    # without EF the per-step quantization error would accumulate ~sqrt(50)x
+    err = np.abs(g_seen_sum - g_true_sum).max()
+    single_step_err = np.abs(0.1 * 3) / 127  # ~1 block scale
+    assert err < 5 * single_step_err, err
+
+
+def test_compressed_training_still_learns(smoke_mesh):
+    params = init_params(TINY, jax.random.PRNGKey(4), dtype=jnp.float32)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=5), compress_grads=True)
+    state = make_train_state(params, tcfg)
+    assert "ef_residual" in state
+    step = jax.jit(make_train_step(TINY, tcfg, smoke_mesh), donate_argnums=(0, 1))
+    batch = _fixed_batch()
+    losses = []
+    for _ in range(30):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0
+
+
+def test_straggler_watchdog():
+    events = []
+    wd = StragglerWatchdog(threshold=5.0, on_event=events.append)
+    jitter = [0.0, 0.002, -0.002, 0.001, -0.001, 0.003, -0.003, 0.0]
+    for step in range(60):
+        for host in range(4):
+            dur = 0.10 + jitter[(step + host) % len(jitter)]
+            if host == 2 and step >= 35:
+                dur = 0.50  # host 2 degrades persistently at step 35
+            wd.observe(step, host, dur)
+    big = [ev for ev in events if ev.duration > 0.4]
+    assert big and big[0].host == 2 and big[0].step == 35
+    assert all(ev.host == 2 for ev in big)
+    # after sustained degradation, host 2 ranks slowest by median
+    assert wd.slowest_hosts(1)[0][0] == 2

@@ -1,0 +1,35 @@
+"""End-to-end driver integration: launch/train.py with SSH dedup +
+checkpointing + resume, via its CLI surface."""
+import pathlib
+
+from repro.launch.train import build_parser, train
+
+
+def test_train_cli_with_resume(tmp_path):
+    common = [
+        "--arch", "tiny-100m", "--global-batch", "4", "--seq-len", "64",
+        "--num-docs", "128", "--lr", "1e-3", "--warmup", "2",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "5", "--log-every", "50",
+    ]
+    # phase 1: 6 steps, checkpoints at 5 and 6
+    args = build_parser().parse_args(common + ["--steps", "6"])
+    out1 = train(args)
+    assert len(out1["losses"]) == 6
+    ckpts = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert ckpts, "no checkpoint written"
+
+    # phase 2: resume to 10 steps — continues from the saved step
+    args = build_parser().parse_args(common + ["--steps", "10", "--resume"])
+    out2 = train(args)
+    assert len(out2["losses"]) < 10  # only the remaining steps ran
+
+
+def test_train_cli_grad_accum_and_compression(tmp_path):
+    args = build_parser().parse_args([
+        "--arch", "tiny-100m", "--steps", "4", "--global-batch", "4",
+        "--seq-len", "64", "--num-docs", "64", "--grad-accum", "2",
+        "--compress-grads", "--dedup", "none", "--log-every", "50",
+    ])
+    out = train(args)
+    assert len(out["losses"]) == 4
+    assert all(l == l for l in out["losses"])  # no NaNs
