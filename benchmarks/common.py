@@ -39,18 +39,18 @@ def centralized_truth(batch, forest, rho=2.0):
     return pairs, maximal_cliques(pairs)
 
 
-def approaches(forest, pair_capacity=1 << 20):
-    """The paper's five approaches as candidate_fn factories (None = SSH)."""
-    from repro.core import brp_candidates, minhash_candidates, type_codes
+# The paper's hash-based approaches, by candidate-backend registry name
+# ("anotherme" is the paper's label for the SSH join).  Centralized and the
+# whole-pipeline UDF baseline are not candidate backends and are benchmarked
+# separately where a figure calls for them.
+APPROACHES = {"anotherme": "ssh", "minhash": "minhash", "brp": "brp"}
 
-    return {
-        "anotherme": None,
-        "minhash": lambda e, b: minhash_candidates(
-            type_codes(e), b.lengths, num_perm=16, bands=4,
-            pair_capacity=pair_capacity,
-        ),
-        "brp": lambda e, b: brp_candidates(
-            type_codes(e), b.lengths, num_types=forest.num_types,
-            pair_capacity=pair_capacity,
-        ),
-    }
+
+def make_engine(forest, backend: str = "ssh", n_shards: int = 1, **config_kw):
+    """An AnotherMeEngine with the named candidate backend."""
+    from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+
+    return AnotherMeEngine(
+        forest, EngineConfig(backend=backend, **config_kw),
+        ExecutionPlan(n_shards=n_shards),
+    )

@@ -4,8 +4,8 @@ The reproduction target: AnotherMe == 100% on both metrics at every N;
 MinHash/BRP degrade (BRP worst)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, approaches, centralized_truth
-from repro.core import AnotherMeConfig, qa1, qa2, run_anotherme
+from benchmarks.common import APPROACHES, Row, centralized_truth, make_engine
+from repro.core import qa1, qa2
 from repro.data import synthetic_setup
 
 GRID_QUICK = (300, 600)
@@ -19,10 +19,8 @@ def run(full: bool = False) -> list[Row]:
             n, num_types=10, classes_per_type=5, num_places=500, seed=0
         )
         cen_pairs, cen_comms = centralized_truth(batch, forest)
-        for name, cand in approaches(forest).items():
-            res = run_anotherme(
-                batch, forest, AnotherMeConfig(), candidate_fn=cand
-            )
+        for name, backend in APPROACHES.items():
+            res = make_engine(forest, backend).run(batch)
             rows.append(Row(
                 f"fig10/{name}/N={n}", 0.0,
                 f"QA1={qa1(res.communities, cen_comms):.3f};"

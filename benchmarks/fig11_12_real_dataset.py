@@ -5,11 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, centralized_truth, timeit
-from repro.core import (
-    AnotherMeConfig, minhash_candidates, qa1, qa2, run_anotherme, type_codes,
-    udf_pipeline,
-)
+from benchmarks.common import Row, centralized_truth, make_engine, timeit
+from repro.core import qa1, qa2, udf_pipeline
 from repro.data import geolife_surrogate
 
 
@@ -20,29 +17,18 @@ def run(full: bool = False) -> list[Row]:
     else:
         batch, forest = geolife_surrogate(num_users=60, num_traj=1_200, seed=0)
     rho = 3.0
-    cfg = AnotherMeConfig(rho=rho)
     small_enough_for_truth = batch.places.shape[0] <= 3_000
     if small_enough_for_truth:
         cen_pairs, cen_comms = centralized_truth(batch, forest, rho=rho)
 
-    t, res = timeit(lambda: run_anotherme(batch, forest, cfg))
-    d = ""
-    if small_enough_for_truth:
-        d = (f"QA1={qa1(res.communities, cen_comms):.3f};"
-             f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}")
-    rows.append(Row("fig11/anotherme", t * 1e6, d))
-
-    t, res_mh = timeit(lambda: run_anotherme(
-        batch, forest, cfg,
-        candidate_fn=lambda e, b: minhash_candidates(
-            type_codes(e), b.lengths, num_perm=16, bands=4,
-            pair_capacity=1 << 22),
-    ))
-    d = ""
-    if small_enough_for_truth:
-        d = (f"QA1={qa1(res_mh.communities, cen_comms):.3f};"
-             f"QA2={qa2(res_mh.similar_pairs, cen_pairs):.3f}")
-    rows.append(Row("fig11/minhash", t * 1e6, d))
+    for name, backend in (("anotherme", "ssh"), ("minhash", "minhash")):
+        engine = make_engine(forest, backend, rho=rho)
+        t, res = timeit(lambda: engine.run(batch))
+        d = ""
+        if small_enough_for_truth:
+            d = (f"QA1={qa1(res.communities, cen_comms):.3f};"
+                 f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}")
+        rows.append(Row(f"fig11/{name}", t * 1e6, d))
 
     if small_enough_for_truth:
         t, _ = timeit(lambda: udf_pipeline(

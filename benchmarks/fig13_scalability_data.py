@@ -3,8 +3,7 @@
 cannot run at these sizes)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, timeit
-from repro.core import AnotherMeConfig, minhash_candidates, run_anotherme, type_codes
+from benchmarks.common import Row, make_engine, timeit
 from repro.data import synthetic_setup
 
 GRID_QUICK = (5_000, 20_000)
@@ -15,16 +14,9 @@ def run(full: bool = False) -> list[Row]:
     rows = []
     for n in (GRID_FULL if full else GRID_QUICK):
         batch, forest = synthetic_setup(n, num_types=300, seed=0)
-        cfg = AnotherMeConfig(community_mode="components")
-        t, res = timeit(lambda: run_anotherme(batch, forest, cfg))
-        rows.append(Row(f"fig13/anotherme/N={n}", t * 1e6,
-                        f"similar={len(res.similar_pairs)}"))
-        t, r2 = timeit(lambda: run_anotherme(
-            batch, forest, cfg,
-            candidate_fn=lambda e, b: minhash_candidates(
-                type_codes(e), b.lengths, num_perm=16, bands=4,
-                pair_capacity=1 << 22),
-        ))
-        rows.append(Row(f"fig13/minhash/N={n}", t * 1e6,
-                        f"similar={len(r2.similar_pairs)}"))
+        for name, backend in (("anotherme", "ssh"), ("minhash", "minhash")):
+            engine = make_engine(forest, backend, community_mode="components")
+            t, res = timeit(lambda: engine.run(batch))
+            rows.append(Row(f"fig13/{name}/N={n}", t * 1e6,
+                            f"similar={len(res.similar_pairs)}"))
     return rows

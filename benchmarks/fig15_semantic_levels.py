@@ -2,8 +2,8 @@
 (stays 100%) and processing time (grows with levels)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, centralized_truth, timeit
-from repro.core import AnotherMeConfig, qa1, qa2, run_anotherme
+from benchmarks.common import Row, centralized_truth, make_engine, timeit
+from repro.core import qa1, qa2
 from repro.data import synthetic_setup
 
 
@@ -16,7 +16,8 @@ def run(full: bool = False) -> list[Row]:
             n_levels=n_levels, seed=0,
         )
         cen_pairs, cen_comms = centralized_truth(batch, forest)
-        t, res = timeit(lambda: run_anotherme(batch, forest, AnotherMeConfig()))
+        engine = make_engine(forest, "ssh")
+        t, res = timeit(lambda: engine.run(batch))
         rows.append(Row(
             f"fig15/anotherme/levels={n_levels}", t * 1e6,
             f"QA1={qa1(res.communities, cen_comms):.3f};"

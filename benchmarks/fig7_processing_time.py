@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, approaches, timeit
-from repro.core import AnotherMeConfig, run_anotherme, udf_pipeline
+from benchmarks.common import APPROACHES, Row, make_engine, timeit
+from repro.core import udf_pipeline
 from repro.core.centralized import centralized_similar_pairs
 from repro.core.encoding import encode_batch, forest_tables
 from repro.data import synthetic_setup
@@ -27,16 +27,11 @@ def run(full: bool = False) -> list[Row]:
     grid = GRID_FULL if full else GRID_QUICK
     for n in grid:
         batch, forest = synthetic_setup(n, seed=0)
-        cfg = AnotherMeConfig(community_mode="components")
-        t, res = timeit(lambda: run_anotherme(batch, forest, cfg))
-        rows.append(Row(f"fig7/anotherme/N={n}", t * 1e6,
-                        f"similar={len(res.similar_pairs)}"))
-        for name, cand in approaches(forest).items():
-            if cand is None:
-                continue
-            t, r2 = timeit(lambda: run_anotherme(batch, forest, cfg, candidate_fn=cand))
+        for name, backend in APPROACHES.items():
+            engine = make_engine(forest, backend, community_mode="components")
+            t, res = timeit(lambda: engine.run(batch))
             rows.append(Row(f"fig7/{name}/N={n}", t * 1e6,
-                            f"similar={len(r2.similar_pairs)}"))
+                            f"similar={len(res.similar_pairs)}"))
         if n <= CENTRAL_CAP:
             enc = encode_batch(batch, forest_tables(forest))
             t, _ = timeit(lambda: centralized_similar_pairs(enc, rho=2.0))

@@ -6,8 +6,7 @@ paper's point that speed without the accuracy column is misleading.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, approaches
-from repro.core import AnotherMeConfig, run_anotherme
+from benchmarks.common import APPROACHES, Row, make_engine
 from repro.data import synthetic_setup
 
 GRID_QUICK = (500, 1000, 2000)
@@ -18,16 +17,11 @@ def run(full: bool = False) -> list[Row]:
     rows = []
     for n in (GRID_FULL if full else GRID_QUICK):
         batch, forest = synthetic_setup(n, seed=0)
-        cfg = AnotherMeConfig(community_mode="components")
         rows.append(Row(f"fig8/centralized/N={n}", 0.0,
                         f"pairs={n*(n-1)//2}"))
-        res = run_anotherme(batch, forest, cfg)
-        rows.append(Row(f"fig8/anotherme/N={n}", 0.0,
-                        f"pairs={res.stats['num_candidates']}"))
-        for name, cand in approaches(forest).items():
-            if cand is None:
-                continue
-            r2 = run_anotherme(batch, forest, cfg, candidate_fn=cand)
+        for name, backend in APPROACHES.items():
+            engine = make_engine(forest, backend, community_mode="components")
+            res = engine.run(batch)
             rows.append(Row(f"fig8/{name}/N={n}", 0.0,
-                            f"pairs={r2.stats['num_candidates']}"))
+                            f"pairs={res.stats['num_candidates']}"))
     return rows

@@ -8,58 +8,25 @@ stay-at-home neighbour out.
 
     PYTHONPATH=src python examples/find_another_me.py
 """
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AnotherMeConfig, run_anotherme
-from repro.core.encoding import SemanticForest, encode_places, forest_tables
-from repro.core.types import PAD_PLACE, TrajectoryBatch
-
-TYPES = ["lodging", "transportation", "business", "dining"]
-CLASSES = ["apartment", "hotel", "airport", "station", "company",
-           "fast_food", "fine_dinner"]
-NAMES = ["Maris Apartment", "Windy Apartment", "Beach House",
-         "Sydney Airport", "O'Hare Airport", "Tokyo Airport",
-         "Paris-CDG", "Facebook Japan", "Microsoft France", "KFC Tokyo",
-         "Restaurant Goude"]
-CLASS_TO_TYPE = np.array([0, 0, 1, 1, 2, 3, 3], np.int32)
-NAME_TO_CLASS = np.array([0, 0, 0, 2, 2, 2, 2, 4, 4, 5, 6], np.int32)
-
-PEOPLE = {
-    "Carol (Sydney)": ["Maris Apartment", "Sydney Airport", "O'Hare Airport",
-                       "Tokyo Airport", "Facebook Japan", "KFC Tokyo",
-                       "Tokyo Airport", "Sydney Airport", "Maris Apartment"],
-    "Dave (Chicago)": ["Windy Apartment", "O'Hare Airport", "Paris-CDG",
-                       "Microsoft France", "Restaurant Goude", "Paris-CDG",
-                       "O'Hare Airport", "Windy Apartment"],
-    "Homebody": ["Beach House", "KFC Tokyo", "Beach House", "KFC Tokyo",
-                 "Beach House"],
-}
+from repro.api import AnotherMeEngine, EngineConfig
+from repro.core.encoding import encode_places, forest_tables
+from repro.data.fig1 import PEOPLE, fig1_world
 
 
 def main():
-    forest = SemanticForest(
-        parents=(CLASS_TO_TYPE, NAME_TO_CLASS),
-        sizes=(len(TYPES), len(CLASSES), len(NAMES)),
-    )
+    batch, forest = fig1_world()
     tables = forest_tables(forest)
-    name_id = {n: i for i, n in enumerate(NAMES)}
-    L = max(len(t) for t in PEOPLE.values())
-    rows, lens = [], []
-    for who, traj in PEOPLE.items():
-        ids = [name_id[p] for p in traj]
+    for (who, traj), ids, length in zip(
+        PEOPLE.items(), np.asarray(batch.places), np.asarray(batch.lengths)
+    ):
         print(f"{who}:")
-        for p, enc in zip(traj, encode_places(ids, np.asarray(tables))):
+        for p, enc in zip(traj, encode_places(ids[:length], np.asarray(tables))):
             print(f"    {enc:10s} {p}")
-        rows.append(ids + [PAD_PLACE] * (L - len(ids)))
-        lens.append(len(ids))
 
-    batch = TrajectoryBatch(
-        places=jnp.asarray(np.asarray(rows, np.int32)),
-        lengths=jnp.asarray(np.asarray(lens, np.int32)),
-        user_id=jnp.arange(len(PEOPLE), dtype=jnp.int32),
-    )
-    res = run_anotherme(batch, forest, AnotherMeConfig(rho=3.0))
+    engine = AnotherMeEngine(forest, EngineConfig(rho=3.0))
+    res = engine.run(batch)
     names = list(PEOPLE)
     print("\nsimilar pairs (MSS > 3):")
     for a, b in sorted(res.similar_pairs):

@@ -4,9 +4,10 @@
 """
 import numpy as np
 
+from repro.api import AnotherMeEngine, EngineConfig
 from repro.core import (
-    AnotherMeConfig, centralized_similar_pairs, encode_batch, forest_tables,
-    maximal_cliques, qa1, qa2, run_anotherme,
+    centralized_similar_pairs, encode_batch, forest_tables, maximal_cliques,
+    qa1, qa2,
 )
 from repro.data import synthetic_setup
 
@@ -18,19 +19,21 @@ def main():
     print(f"trajectories: {batch.num_trajectories}, "
           f"semantic forest sizes: {forest.sizes}")
 
-    # 2. run AnotherMe: encode -> SSH -> similarity -> communities
-    result = run_anotherme(batch, forest, AnotherMeConfig(rho=2.0))
+    # 2. run AnotherMe: encode -> SSH join -> similarity -> communities.
+    #    EngineConfig(backend=...) swaps the candidate join by name:
+    #    "ssh" (the paper's lossless join), "minhash", "brp", "udf".
+    engine = AnotherMeEngine(forest, EngineConfig(backend="ssh", rho=2.0))
+    result = engine.run(batch)
     s = result.stats
     print(f"candidates from SSH join : {s['num_candidates']:>8d}")
     print(f"similar pairs (MSS > 2)  : {s['num_similar']:>8d}")
     print(f"communities of interest  : {s['num_communities']:>8d}")
-    print(f"phase times: encode {s['t_encode']:.2f}s  shingle "
-          f"{s['t_shingle']:.2f}s  join {s['t_join']:.2f}s  "
-          f"score {s['t_score']:.2f}s")
+    print(f"phase times: encode {s['t_encode']:.2f}s  "
+          f"candidates {s['t_candidates']:.2f}s  score {s['t_score']:.2f}s")
 
     # 3. validate against the centralized ground truth on a subsample
     sub, _ = synthetic_setup(400, seed=0)
-    res_small = run_anotherme(sub, forest, AnotherMeConfig(rho=2.0))
+    res_small = engine.run(sub)
     enc = encode_batch(sub, forest_tables(forest))
     cl, cr, _ = centralized_similar_pairs(enc, rho=2.0)
     cen = {(int(a), int(b)) for a, b in zip(cl, cr)}

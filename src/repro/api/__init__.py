@@ -1,0 +1,42 @@
+"""Public API of the AnotherMe semantic-trajectory engine.
+
+    from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+
+    engine = AnotherMeEngine(forest, EngineConfig(backend="ssh"))
+    result = engine.run(batch)        # .similar_pairs / .communities / .stats
+
+Components (all replaceable independently):
+
+  AnotherMeEngine / EngineConfig / ExecutionPlan   one entry point,
+      single-device jit or shard_map selected by ExecutionPlan(n_shards=...)
+  get_backend / register_backend / available_backends
+      string-keyed candidate-backend registry ("ssh", "minhash", "brp", "udf")
+  CandidateBackend / BackendContext                backend protocol
+  EncodeStage / CandidateStage / ScoreStage / CommunitiesStage
+      the typed stage pipeline the engine composes
+  CapacityPlanner                                  buffer sizing + overflow retry
+  Instrumentation                                  phase timing/stats wrapper
+  make_sharded_pipeline / plan_capacities / DistributedPlan
+      the shard_map building blocks (for dry-runs and custom meshes)
+
+The legacy ``repro.core.run_anotherme`` / ``AnotherMeConfig`` remain as a
+deprecation shim over this API.
+"""
+from repro.api.backends import (
+    BackendContext, BRPBackend, CallableBackend, CandidateBackend,
+    MinHashBackend, SSHBackend, UDFBackend, available_backends, get_backend,
+    register_backend,
+)
+from repro.api.capacity import CapacityPlanner
+from repro.api.engine import (
+    AnotherMeEngine, EngineConfig, EngineResult, ExecutionPlan,
+)
+from repro.api.instrumentation import Instrumentation
+from repro.api.sharded import (
+    DistributedPlan, gather_similar_pairs, make_distributed_anotherme,
+    make_sharded_pipeline, pad_to_shards, plan_capacities,
+)
+from repro.api.stages import (
+    CandidateStage, CommunitiesStage, EncodeStage, PipelineContext, ScoreStage,
+    Stage, validate_lcs_impl,
+)

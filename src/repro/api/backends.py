@@ -1,0 +1,257 @@
+"""Candidate-generation backends behind a string-keyed registry.
+
+Phase (ii) of the paper's pipeline — "which trajectory pairs are worth
+scoring?" — is the only phase the paper varies across its five approaches.
+Each variant is a :class:`CandidateBackend`; benchmarks and the engine
+select one purely by registry name:
+
+  "ssh"      k-sequential-shingle hashing (the paper's AnotherMe join;
+             lossless, hence the 100% QA1/QA2 rows of Figs. 10/12)
+  "minhash"  MinHashLSH over the type presence *set* (Spark's built-in;
+             discards order and repetition — loses accuracy)
+  "brp"      Bucketed Random Projection of the type *count* vector
+             (discards order entirely — worst accuracy)
+  "udf"      the paper's "user-defined" black box: the same shingle logic
+             as "ssh" but computed row-at-a-time in host Python, opaque
+             to XLA (the systems baseline of Fig. 7)
+
+Every backend reduces to PAD_KEY-padded int32 join keys ``[N, S]`` — pairs
+sharing any key become candidates via the same sort-merge join — so one
+capacity planner and one sharded shuffle serve all of them.  Backends that
+cannot express themselves as keys (e.g. legacy ``candidate_fn`` callables)
+override :meth:`CandidateBackend.candidates` wholesale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.brp import brp_bucket_keys
+from repro.core.encoding import type_codes
+from repro.core.minhash import minhash_band_keys, minhash_signatures
+from repro.core.ssh import exact_pair_count, ssh_candidates
+from repro.core.types import CandidatePairs, EncodedBatch, PAD_KEY, TrajectoryBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendContext:
+    """Static pipeline facts a backend may need (from config + forest)."""
+
+    k: int
+    num_types: int
+
+
+class CandidateBackend:
+    """Protocol/base for candidate generation.
+
+    Subclasses implement :meth:`join_keys` (preferred: enables the shared
+    join, capacity planner, and sharded execution) or override
+    :meth:`candidates` directly.  :meth:`shard_key_fn` optionally returns a
+    jax-traceable per-shard key function so keys are built on-device inside
+    ``shard_map``; returning None makes the engine build keys host-side and
+    shuffle them in as a sharded input.
+    """
+
+    name: str = "?"
+    # key-producing backends run under shard_map (on-device key_fn or
+    # host keys shuffled in); key-less ones are single-device only
+    supports_sharded: bool = True
+
+    def join_keys(
+        self, encoded: EncodedBatch, batch: TrajectoryBatch, ctx: BackendContext
+    ) -> jnp.ndarray:
+        """PAD_KEY-padded int32 join keys [N, S]."""
+        raise NotImplementedError
+
+    def expected_pairs(self, keys: jnp.ndarray) -> int:
+        """Exact pre-dedup join cardinality, for capacity planning."""
+        return exact_pair_count(keys)
+
+    def candidates(
+        self,
+        encoded: EncodedBatch,
+        batch: TrajectoryBatch,
+        ctx: BackendContext,
+        *,
+        pair_capacity: int,
+    ) -> CandidatePairs:
+        keys = self.join_keys(encoded, batch, ctx)
+        return ssh_candidates(jnp.asarray(keys), pair_capacity=pair_capacity)
+
+    def shard_key_fn(self, ctx: BackendContext) -> Callable | None:
+        """(local_type_codes [n, L], local_lengths [n]) -> keys [n, S]."""
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class SSHBackend(CandidateBackend):
+    """The paper's Semantic Sequential Hashing join (Algorithm 2)."""
+
+    dedup: bool = True
+    name: str = dataclasses.field(default="ssh", init=False)
+
+    def join_keys(self, encoded, batch, ctx):
+        from repro.core.shingling import shingles_from_types
+
+        return shingles_from_types(
+            type_codes(encoded), encoded.lengths,
+            k=ctx.k, num_types=ctx.num_types, dedup=self.dedup,
+        )
+
+    def shard_key_fn(self, ctx):
+        from repro.core.shingling import shingles_from_types
+
+        def key_fn(local_types, local_lengths):
+            return shingles_from_types(
+                local_types, local_lengths,
+                k=ctx.k, num_types=ctx.num_types, dedup=self.dedup,
+            )
+
+        return key_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class MinHashBackend(CandidateBackend):
+    """MinHashLSH over type presence sets (Spark's built-in; section V.1)."""
+
+    num_perm: int = 16
+    bands: int = 4
+    seed: int = 0
+    name: str = dataclasses.field(default="minhash", init=False)
+
+    def join_keys(self, encoded, batch, ctx):
+        sig = minhash_signatures(
+            type_codes(encoded), encoded.lengths,
+            num_perm=self.num_perm, seed=self.seed,
+        )
+        return minhash_band_keys(sig, bands=self.bands)
+
+    def shard_key_fn(self, ctx):
+        def key_fn(local_types, local_lengths):
+            sig = minhash_signatures(
+                local_types, local_lengths,
+                num_perm=self.num_perm, seed=self.seed,
+            )
+            return minhash_band_keys(sig, bands=self.bands)
+
+        return key_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class BRPBackend(CandidateBackend):
+    """Bucketed Random Projection of type count vectors (section V.1)."""
+
+    num_proj: int = 4
+    bucket_length: float = 2.0
+    seed: int = 0
+    name: str = dataclasses.field(default="brp", init=False)
+
+    def join_keys(self, encoded, batch, ctx):
+        return brp_bucket_keys(
+            type_codes(encoded), encoded.lengths,
+            num_types=ctx.num_types, num_proj=self.num_proj,
+            bucket_length=self.bucket_length, seed=self.seed,
+        )
+
+    def shard_key_fn(self, ctx):
+        def key_fn(local_types, local_lengths):
+            return brp_bucket_keys(
+                local_types, local_lengths,
+                num_types=ctx.num_types, num_proj=self.num_proj,
+                bucket_length=self.bucket_length, seed=self.seed,
+            )
+
+        return key_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class UDFBackend(CandidateBackend):
+    """The "user-defined" black box: shingle keys built row-at-a-time in
+    host Python (same base-Q perfect hash as "ssh", so the results are
+    bit-identical), invisible to XLA.  ``shard_key_fn`` is None: in sharded
+    mode the engine computes these keys on the driver and shuffles them in,
+    mirroring how a Spark UDF forces data through the driver-side bytecode
+    wall the paper measures in Fig. 7.
+    """
+
+    name: str = dataclasses.field(default="udf", init=False)
+
+    def join_keys(self, encoded, batch, ctx):
+        q, k = ctx.num_types, ctx.k
+        if q**k >= 2**31:
+            raise ValueError(
+                f"Q**k = {q}**{k} overflows int32; use a smaller k or Q."
+            )
+        types = np.asarray(type_codes(encoded))
+        lengths = np.asarray(encoded.lengths)
+        per_row: list[set[int]] = []
+        for i in range(types.shape[0]):
+            row = types[i, : lengths[i]].tolist()
+            keys = set()
+            for combo in itertools.combinations(row, k):
+                key = 0
+                for c in combo:
+                    key = key * q + int(c)
+                keys.add(key)
+            per_row.append(keys)
+        s = max(1, max((len(r) for r in per_row), default=1))
+        out = np.full((types.shape[0], s), PAD_KEY, np.int32)
+        for i, keys in enumerate(per_row):
+            out[i, : len(keys)] = sorted(keys)
+        return jnp.asarray(out)
+
+
+class CallableBackend(CandidateBackend):
+    """Adapter for legacy ``candidate_fn`` callables (deprecated escape
+    hatch of ``run_anotherme``); key-less, single-device only."""
+
+    name = "callable"
+    supports_sharded = False
+
+    def __init__(self, fn: Callable):
+        self._fn = fn
+
+    def join_keys(self, encoded, batch, ctx):
+        return None
+
+    def candidates(self, encoded, batch, ctx, *, pair_capacity):
+        return self._fn(encoded, batch)
+
+
+_REGISTRY: dict[str, Callable[..., CandidateBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., CandidateBackend]):
+    """Register a backend factory under ``name`` (replaces any previous)."""
+    _REGISTRY[name] = factory
+    return factory
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str, **options) -> CandidateBackend:
+    """Instantiate a registered backend by name.
+
+    ``options`` are forwarded to the backend factory (e.g.
+    ``get_backend("minhash", num_perm=32, bands=8)``).
+    """
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown candidate backend {name!r}; registered backends: "
+            f"{list(available_backends())}"
+        ) from None
+    return factory(**options)
+
+
+register_backend("ssh", SSHBackend)
+register_backend("minhash", MinHashBackend)
+register_backend("brp", BRPBackend)
+register_backend("udf", UDFBackend)

@@ -1,0 +1,54 @@
+"""Shared capacity planning for fixed-shape candidate buffers.
+
+Every candidate join in the engine writes into a static ``pair_capacity``
+buffer (DESIGN.md: Spark's dynamic memory traded for deterministic
+compilable shapes).  The policy — size from the exact join cardinality with
+slack, round to a power of two so jit caches hit across batches, retry with
+doubled capacity on overflow — used to live inline in ``run_anotherme``;
+it is now one object shared by every backend and both execution modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.types import CandidatePairs
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlanner:
+    """Capacity sizing + overflow-retry policy for candidate buffers.
+
+    slack:       multiplicative headroom over the expected pair count.
+    floor_pow2:  minimum capacity is ``2**floor_pow2`` (keeps tiny worlds
+                 from generating one jit cache entry per batch size).
+    max_retries: doubling retries after an overflow before giving up.
+    """
+
+    slack: float = 1.10
+    floor_pow2: int = 10
+    max_retries: int = 3
+
+    def initial_capacity(self, expected_pairs: int) -> int:
+        """Power-of-two capacity covering ``expected_pairs`` with slack."""
+        want = max(int(expected_pairs * self.slack), 1)
+        return 1 << max(self.floor_pow2, int(np.ceil(np.log2(want))))
+
+    def run_with_retry(
+        self, build: Callable[[int], CandidatePairs], capacity: int
+    ) -> tuple[CandidatePairs, int]:
+        """Call ``build(capacity)``, doubling capacity while it overflows.
+
+        Returns (candidates, final_capacity).  A persistent overflow after
+        ``max_retries`` doublings is returned as-is — the overflow counter
+        stays nonzero so the caller can surface it, never silently drop it.
+        """
+        cand = build(capacity)
+        for _ in range(self.max_retries):
+            if int(cand.overflow) == 0:
+                break
+            capacity *= 2
+            cand = build(capacity)
+        return cand, capacity

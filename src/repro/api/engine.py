@@ -1,0 +1,280 @@
+"""`AnotherMeEngine`: one entry point for the whole pipeline.
+
+    from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+
+    engine = AnotherMeEngine(forest, EngineConfig(backend="ssh", rho=2.0))
+    result = engine.run(batch)                       # single-device jit
+
+    engine = AnotherMeEngine(forest, EngineConfig(backend="minhash"),
+                             ExecutionPlan(n_shards=8))
+    result = engine.run(batch)                       # shard_map execution
+
+The engine composes the typed stages of api/stages.py — Encode, Candidate,
+Score, Communities — and selects single-device jit or shard_map execution
+from a single :class:`ExecutionPlan` instead of two divergent code paths:
+with ``n_shards > 1`` the Candidate+Score stages are replaced by one fused
+shard_map stage (api/sharded.py) while Encode and Communities are shared
+verbatim.  Candidate generation is chosen by registry name (api/backends.py)
+and capacity policy lives in the shared CapacityPlanner (api/capacity.py);
+phase timing is collected by the instrumentation wrapper so the stage logic
+itself stays pure and jit-cacheable across repeated runs with identical
+static shapes.
+
+Sharded scoring always uses the wavefront LCS (``lcs_impl`` selects the
+implementation on the single-device path only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import (
+    BackendContext, CandidateBackend, get_backend,
+)
+from repro.api.capacity import CapacityPlanner
+from repro.api.instrumentation import Instrumentation
+from repro.api.sharded import (
+    gather_similar_pairs, make_sharded_pipeline, pad_to_shards, plan_capacities,
+)
+from repro.api.stages import (
+    CandidateStage, CommunitiesStage, EncodeStage, PipelineContext, ScoreStage,
+    validate_lcs_impl,
+)
+from repro.core import compat
+from repro.core.encoding import SemanticForest, forest_tables
+from repro.core.pipeline import AnotherMeResult as EngineResult
+from repro.core.similarity import default_betas
+from repro.core.types import PAD_ID, ScoredPairs, TrajectoryBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Algorithm parameters (paper defaults; section V.1)."""
+
+    k: int = 3                      # shingle order
+    rho: float = 2.0                # similarity threshold
+    betas: tuple | None = None      # level weights; None -> uniform 1/n
+    backend: str = "ssh"            # candidate backend registry name
+    backend_options: Mapping | None = None  # kwargs for the backend factory
+    lcs_impl: str = "wavefront"     # "wavefront" | "ref" | "kernel"
+    pair_capacity: int | None = None  # None -> plan from exact join size
+    capacity_slack: float = 1.10
+    community_mode: str = "cliques"  # "cliques" | "components"
+    max_retries: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Where and how the pipeline executes.
+
+    n_shards=1 runs the jitted single-device stages; n_shards>1 runs the
+    shard_map pipeline on the first n_shards devices (or ``devices``),
+    padding the batch to a multiple of n_shards with empty trajectories.
+    """
+
+    n_shards: int = 1
+    score_mode: str = "replicate"   # "replicate" | "shuffle" (sharded only)
+    axis_name: str = "ex"
+    devices: tuple | None = None    # default: jax.devices()[:n_shards]
+    shard_slack: float = 1.3        # slack for the sharded capacity plan
+
+
+class AnotherMeEngine:
+    """Composable AnotherMe pipeline over a fixed semantic forest.
+
+    One engine instance owns the forest tables, the candidate backend, the
+    capacity planner, and (for sharded plans) a cache of compiled shard_map
+    runners, so repeated ``run`` calls with identical static shapes reuse
+    every jit cache.
+    """
+
+    def __init__(
+        self,
+        forest: SemanticForest,
+        config: EngineConfig = EngineConfig(),
+        plan: ExecutionPlan = ExecutionPlan(),
+        *,
+        backend: CandidateBackend | None = None,
+    ):
+        validate_lcs_impl(config.lcs_impl)
+        if plan.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {plan.n_shards}")
+        self.forest = forest
+        self.config = config
+        self.plan = plan
+        self.tables = forest_tables(forest)
+        self.betas = (
+            jnp.asarray(config.betas, jnp.float32)
+            if config.betas is not None
+            else default_betas(forest.num_levels)
+        )
+        self.backend = backend if backend is not None else get_backend(
+            config.backend, **dict(config.backend_options or {})
+        )
+        if plan.n_shards > 1 and not self.backend.supports_sharded:
+            raise ValueError(
+                f"candidate backend {self.backend.name!r} produces no join "
+                "keys and only supports ExecutionPlan(n_shards=1); use a "
+                "registered key-based backend for sharded execution"
+            )
+        self.backend_ctx = BackendContext(k=config.k, num_types=forest.num_types)
+        self.planner = CapacityPlanner(
+            slack=config.capacity_slack, max_retries=config.max_retries
+        )
+        if plan.n_shards == 1:
+            self._stages = (
+                EncodeStage(), CandidateStage(), ScoreStage(), CommunitiesStage(),
+            )
+        else:
+            self._stages = (
+                EncodeStage(), _ShardedCandidateScoreStage(self), CommunitiesStage(),
+            )
+        self._mesh = None
+        self._runner_cache: dict = {}
+        self._plan_cache: dict = {}
+
+    # -- public entry point --------------------------------------------------
+
+    def run(self, batch: TrajectoryBatch) -> EngineResult:
+        """Run the full pipeline on one batch; same signature either way."""
+        if self.plan.n_shards > 1:
+            batch = self._padded(batch)
+        ctx = PipelineContext(
+            batch=batch, forest=self.forest, tables=self.tables,
+            betas=self.betas, config=self.config, backend=self.backend,
+            backend_ctx=self.backend_ctx, planner=self.planner,
+            instr=Instrumentation(),
+        )
+        for stage in self._stages:
+            stage.run(ctx)
+        return EngineResult(
+            scored=ctx.scored, similar_pairs=ctx.similar_pairs,
+            communities=ctx.communities, stats=ctx.instr.finalize(),
+        )
+
+    # -- sharded-execution plumbing ------------------------------------------
+
+    def _padded(self, batch: TrajectoryBatch) -> TrajectoryBatch:
+        places, lengths = pad_to_shards(
+            np.asarray(batch.places), np.asarray(batch.lengths),
+            self.plan.n_shards,
+        )
+        if places.shape[0] == batch.num_trajectories:
+            return batch
+        return TrajectoryBatch(
+            places=jnp.asarray(places), lengths=jnp.asarray(lengths),
+            user_id=jnp.arange(places.shape[0], dtype=jnp.int32),
+        )
+
+    def mesh(self) -> jax.sharding.Mesh:
+        if self._mesh is None:
+            n = self.plan.n_shards
+            devices = self.plan.devices or tuple(jax.devices())[:n]
+            if len(devices) < n:
+                raise ValueError(
+                    f"ExecutionPlan(n_shards={n}) needs {n} devices, "
+                    f"have {len(jax.devices())}"
+                )
+            self._mesh = compat.make_mesh(
+                (n,), (self.plan.axis_name,), devices=devices
+            )
+        return self._mesh
+
+    def _sharded_runner(self, dplan, key_fn, shapes):
+        cache_key = (dplan, self.plan.score_mode, key_fn is None, shapes)
+        runner = self._runner_cache.get(cache_key)
+        if runner is None:
+            runner = make_sharded_pipeline(
+                self.mesh(), dplan, betas=self.betas, key_fn=key_fn,
+                axis_name=self.plan.axis_name, score_mode=self.plan.score_mode,
+            )
+            self._runner_cache[cache_key] = runner
+        return runner
+
+
+class _ShardedCandidateScoreStage:
+    """Candidate + Score fused into one shard_map program (Fig. 5).
+
+    Join keys are planned host-side from the backend's actual keys
+    (plan_capacities); key-producing backends rebuild them on-device per
+    shard, key-less ones ("udf") have their host keys shuffled in.  A
+    capacity bust retries with doubled buffers, like the single-device
+    planner.
+    """
+
+    name = "sharded_join_score"
+
+    def __init__(self, engine: AnotherMeEngine):
+        self.engine = engine
+
+    def run(self, ctx: PipelineContext) -> None:
+        eng = self.engine
+        plan, config, instr = eng.plan, eng.config, ctx.instr
+
+        with instr.phase("keys"):
+            keys = ctx.backend.join_keys(ctx.encoded, ctx.batch, ctx.backend_ctx)
+            keys_np = np.asarray(keys)
+        ctx.keys = keys
+
+        # plan capacities host-side once per distinct key matrix; warm runs
+        # (same data) skip the numpy planning pass and any retry doublings
+        with instr.phase("plan"):
+            plan_key = (keys_np.shape, hash(keys_np.tobytes()))
+            dplan = eng._plan_cache.get(plan_key)
+            if dplan is None:
+                dplan = plan_capacities(
+                    keys_np, plan.n_shards, slack=plan.shard_slack
+                )
+        key_fn = ctx.backend.shard_key_fn(ctx.backend_ctx)
+
+        with instr.phase("execute"):
+            out, dplan = self._execute(ctx, dplan, key_fn, keys_np)
+        eng._plan_cache[plan_key] = dplan
+        instr.record(
+            shard_plan=dataclasses.asdict(dplan),
+            join_overflow=int(np.asarray(out["overflow"]).sum()),
+        )
+
+        left = np.asarray(out["left"]).reshape(-1)
+        right = np.asarray(out["right"]).reshape(-1)
+        mss = np.asarray(out["mss"]).reshape(-1)
+        level_lcs = np.asarray(out["level_lcs"])
+        level_lcs = level_lcs.reshape(-1, level_lcs.shape[-1])
+        valid = left != PAD_ID
+        ctx.scored = ScoredPairs(
+            left=jnp.asarray(left), right=jnp.asarray(right),
+            level_lcs=jnp.asarray(level_lcs), mss=jnp.asarray(mss),
+            count=jnp.asarray(int(valid.sum()), jnp.int32),
+            overflow=jnp.asarray(int(np.asarray(out["overflow"]).sum()), jnp.int32),
+        )
+        ctx.similar_pairs = gather_similar_pairs(out, rho=config.rho)
+        instr.record(
+            num_candidates=int(valid.sum()),
+            num_similar=len(ctx.similar_pairs),
+        )
+
+    def _execute(self, ctx, dplan, key_fn, keys_np):
+        eng = self.engine
+        first = (
+            jnp.asarray(keys_np) if key_fn is None else ctx.batch.places
+        )
+        shapes = (first.shape, ctx.encoded.codes.shape)
+        for attempt in range(eng.planner.max_retries + 1):
+            runner = eng._sharded_runner(dplan, key_fn, shapes)
+            out = runner(first, ctx.batch.lengths, ctx.encoded.codes)
+            out["mss"].block_until_ready()
+            if int(np.asarray(out["overflow"]).sum()) == 0:
+                break
+            if attempt < eng.planner.max_retries:
+                dplan = dataclasses.replace(
+                    dplan,
+                    shingle_route_cap=dplan.shingle_route_cap * 2,
+                    local_pair_cap=dplan.local_pair_cap * 2,
+                    pair_route_cap=dplan.pair_route_cap * 2,
+                    scored_cap=dplan.scored_cap * 2,
+                )
+        return out, dplan

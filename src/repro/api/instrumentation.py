@@ -1,0 +1,70 @@
+"""Phase timing/stats collection, separated from phase logic.
+
+The legacy driver interleaved ``time.perf_counter()`` stamps with the phase
+code itself, which made the phases impossible to reuse (and misattributed
+baseline hash cost to the shingle phase — ISSUE 1).  The engine's stages are
+pure; all wall timing goes through this wrapper, so the same stage objects
+are jit-cacheable across repeated ``engine.run`` calls with identical
+static shapes.
+
+Stats key conventions (superset of the legacy ``run_anotherme`` keys):
+
+  t_encode       phase (i)   semantic encoding
+  t_keys         phase (ii)a join-key construction (shingles / signatures /
+                             projections; 0 for callable backends)
+  t_join         phase (ii)b sort-merge join + dedup (+ overflow retries)
+  t_candidates   t_keys + t_join — the full candidate-generation cost,
+                 correct for every backend (fixes the Fig. 9 misattribution)
+  t_score        phase (iii) similarity scoring
+  t_communities  phase (iv)  community detection
+  t_total        sum of every t_* phase above
+  t_shingle      legacy alias of t_keys (kept for old consumers)
+
+Sharded runs fuse the join and score phases into one shard_map program;
+they record ``t_plan`` (host capacity planning) and ``t_execute`` (the fused
+device program) instead of ``t_join``/``t_score``, and ``t_candidates``
+then covers keys + plan + execute (``t_score`` reads 0.0 — the score cost
+is inside ``t_execute`` and cannot be split without extra device syncs).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+
+class Instrumentation:
+    """Collects per-phase wall times and scalar stats for one run."""
+
+    def __init__(self) -> None:
+        self.stats: dict = {}
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        """Time a phase; re-entering the same name accumulates."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            key = f"t_{name}"
+            self.stats[key] = self.stats.get(key, 0.0) + time.perf_counter() - t0
+
+    def record(self, **values) -> None:
+        self.stats.update(values)
+
+    def finalize(self) -> dict:
+        """Derive the composite keys and return the stats dict."""
+        s = self.stats
+        s.setdefault("t_keys", 0.0)
+        if "t_join" in s:
+            s["t_candidates"] = s["t_keys"] + s["t_join"]
+        elif "t_execute" in s:  # sharded: join+score fused into one program
+            s["t_candidates"] = (
+                s["t_keys"] + s.get("t_plan", 0.0) + s["t_execute"]
+            )
+            s.setdefault("t_score", 0.0)
+        s["t_shingle"] = s["t_keys"]  # legacy alias
+        s["t_total"] = sum(
+            v for k, v in s.items()
+            if k.startswith("t_") and k not in ("t_total", "t_candidates", "t_shingle")
+        )
+        return s

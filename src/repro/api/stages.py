@@ -1,0 +1,198 @@
+"""Typed pipeline stages: Encode -> Candidate -> Score -> Communities.
+
+Each stage is a small object with a ``run(ctx)`` method that reads and
+writes one :class:`PipelineContext`.  Stages hold no timing code (that is
+the instrumentation wrapper's job) and no capacity policy (that is the
+planner's), so the same stage objects serve the single-device engine, the
+sharded engine (which swaps the middle stages for a fused shard_map stage,
+see api/sharded.py), and any future composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import BackendContext, CandidateBackend
+from repro.api.capacity import CapacityPlanner
+from repro.api.instrumentation import Instrumentation
+import repro.core.communities as comm
+from repro.core.encoding import (
+    PAD_CODE_A, PAD_CODE_B, SemanticForest, encode_batch,
+)
+from repro.core.similarity import mss_scores, repad, score_pairs
+from repro.core.ssh import ssh_candidates
+from repro.core.types import (
+    CandidatePairs, EncodedBatch, PAD_ID, ScoredPairs, TrajectoryBatch,
+)
+
+LCS_IMPLS = ("wavefront", "ref", "kernel")
+
+
+def validate_lcs_impl(name: str) -> str:
+    if name not in LCS_IMPLS:
+        raise ValueError(
+            f"unknown lcs_impl {name!r}; valid implementations: {list(LCS_IMPLS)}"
+        )
+    return name
+
+
+@dataclasses.dataclass
+class PipelineContext:
+    """Mutable blackboard the stages read from / write to."""
+
+    batch: TrajectoryBatch
+    forest: SemanticForest
+    tables: Any
+    betas: jnp.ndarray
+    config: Any                   # EngineConfig (kept untyped: no cycle)
+    backend: CandidateBackend
+    backend_ctx: BackendContext
+    planner: CapacityPlanner
+    instr: Instrumentation
+    # stage outputs
+    encoded: EncodedBatch | None = None
+    keys: jnp.ndarray | None = None
+    candidates: CandidatePairs | None = None
+    scored: ScoredPairs | None = None
+    similar_pairs: set | None = None
+    communities: set | None = None
+
+
+class Stage(Protocol):
+    name: str
+
+    def run(self, ctx: PipelineContext) -> None: ...
+
+
+class EncodeStage:
+    """Phase (i): multi-level semantic encoding of the batch."""
+
+    name = "encode"
+
+    def run(self, ctx: PipelineContext) -> None:
+        with ctx.instr.phase("encode"):
+            ctx.encoded = encode_batch(ctx.batch, ctx.tables)
+            ctx.encoded.codes.block_until_ready()
+
+
+class CandidateStage:
+    """Phase (ii): join keys + candidate pairs via the configured backend.
+
+    Key-based backends go through the shared sort-merge join with planned
+    capacity and overflow retries; key-less backends (legacy callables)
+    produce CandidatePairs directly.
+    """
+
+    name = "candidates"
+
+    def run(self, ctx: PipelineContext) -> None:
+        backend, instr = ctx.backend, ctx.instr
+        with instr.phase("keys"):
+            keys = backend.join_keys(ctx.encoded, ctx.batch, ctx.backend_ctx)
+            if keys is not None:
+                keys = jnp.asarray(keys)
+                keys.block_until_ready()
+        ctx.keys = keys
+
+        with instr.phase("join"):
+            if keys is None:
+                cap = ctx.config.pair_capacity or 0
+                cand = backend.candidates(
+                    ctx.encoded, ctx.batch, ctx.backend_ctx, pair_capacity=cap
+                )
+            else:
+                cap = ctx.config.pair_capacity
+                if cap is None:
+                    cap = ctx.planner.initial_capacity(backend.expected_pairs(keys))
+                cand, cap = ctx.planner.run_with_retry(
+                    lambda c: ssh_candidates(keys, pair_capacity=c), cap
+                )
+            cand.left.block_until_ready()
+        ctx.candidates = cand
+        instr.record(
+            pair_capacity=int(cand.left.shape[0]) if keys is None else cap,
+            num_candidates=int(cand.count),
+            join_overflow=int(cand.overflow),
+        )
+
+
+class ScoreStage:
+    """Phase (iii): multi-level LCS + MSS scoring, then the rho threshold."""
+
+    name = "score"
+
+    def run(self, ctx: PipelineContext) -> None:
+        cfg, cand = ctx.config, ctx.candidates
+        impl = validate_lcs_impl(cfg.lcs_impl)
+        with ctx.instr.phase("score"):
+            if impl == "kernel":
+                level_lcs, mss = _score_with_kernel(ctx.encoded, cand, ctx.betas)
+            else:
+                level_lcs, mss = score_pairs(
+                    ctx.encoded.codes, ctx.encoded.lengths,
+                    cand.left, cand.right, ctx.betas, impl_name=impl,
+                )
+            mss.block_until_ready()
+
+        left_np = np.asarray(cand.left)
+        right_np = np.asarray(cand.right)
+        similar_mask = (left_np != PAD_ID) & (np.asarray(mss) > cfg.rho)
+        ctx.similar_pairs = {
+            (int(a), int(b))
+            for a, b in zip(left_np[similar_mask], right_np[similar_mask])
+        }
+        ctx.scored = ScoredPairs(
+            left=cand.left, right=cand.right, level_lcs=level_lcs, mss=mss,
+            count=cand.count, overflow=cand.overflow,
+        )
+        ctx.instr.record(num_similar=len(ctx.similar_pairs))
+
+
+class CommunitiesStage:
+    """Phase (iv): communities of interest from the similar-pair graph.
+
+    Operates on the host-side similar-pair set, so it is shared verbatim by
+    the single-device and sharded execution paths.
+    """
+
+    name = "communities"
+
+    def run(self, ctx: PipelineContext) -> None:
+        cfg = ctx.config
+        pairs = ctx.similar_pairs
+        with ctx.instr.phase("communities"):
+            if cfg.community_mode == "cliques":
+                ctx.communities = comm.maximal_cliques(pairs)
+            elif cfg.community_mode == "components":
+                if pairs:
+                    sl, sr = map(np.asarray, zip(*sorted(pairs)))
+                else:
+                    sl = sr = np.empty((0,), np.int32)
+                labels = comm.connected_components(
+                    jnp.asarray(sl, jnp.int32), jnp.asarray(sr, jnp.int32),
+                    num_nodes=ctx.batch.num_trajectories,
+                )
+                ctx.communities = comm.components_as_sets(np.asarray(labels))
+            else:
+                raise ValueError(
+                    f"unknown community_mode {cfg.community_mode!r}; "
+                    "valid modes: ['cliques', 'components']"
+                )
+        ctx.instr.record(num_communities=len(ctx.communities))
+
+
+def _score_with_kernel(encoded, cand, betas):
+    """Score candidates with the Pallas LCS kernel (kernels/lcs)."""
+    from repro.kernels.lcs import ops as lcs_ops
+
+    li = jnp.where(cand.left == PAD_ID, 0, cand.left)
+    ri = jnp.where(cand.right == PAD_ID, 0, cand.right)
+    P = li.shape[0]
+    H, L = encoded.codes.shape[1], encoded.codes.shape[2]
+    a = repad(encoded.codes[li], encoded.lengths[li], PAD_CODE_A).reshape(P * H, L)
+    b = repad(encoded.codes[ri], encoded.lengths[ri], PAD_CODE_B).reshape(P * H, L)
+    level_lcs = lcs_ops.lcs(a, b).reshape(P, H)
+    return level_lcs, mss_scores(level_lcs, betas)

@@ -1,0 +1,35 @@
+"""jax version compatibility (0.4.x .. 0.6+) for meshes and shard_map.
+
+The repo targets the current jax API (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh`` with ``axis_types``); older versions spell these
+``jax.experimental.shard_map.shard_map(check_rep=...)`` and have no
+``axis_types``/``AxisType``.  Every mesh/shard_map construction in the repo
+goes through these two helpers so the whole pipeline runs on either API.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = list(devices)
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` without replication/VMA checking, any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

@@ -1,315 +1,20 @@
-"""Distributed AnotherMe: the Spark shuffle mapped onto shard_map collectives.
+"""Deprecated location — the sharded pipeline moved to ``repro.api.sharded``.
 
-Every Spark stage of the paper's Fig. 5 has a direct analogue here:
-
-  Spark executors            -> devices on a flat "ex" mesh axis
-  hash-shuffle on shingle    -> lax.all_to_all of fixed-capacity buckets
-    (D4 repartition)            routed by hash(shingle) % n_shards
-  local sort-merge join      -> ssh.pairs_from_rows on received rows
-  shuffle pairs for dedup    -> second all_to_all routed by hash(lo, hi)
-    ("score each pair once")    so every pair lands on exactly ONE shard;
-                                the local dedup is then globally exact
-  executor-local scoring     -> batched wavefront/Pallas LCS on local pairs
-
-Static capacities (rows per destination bucket, pairs per shard) are planned
-host-side from exact cardinalities (plan_capacities) and every stage carries
-an overflow counter, so a capacity bust is detected, never silent.
-
-The same code runs on 1 device (n_shards=1 degenerates to the single-device
-pipeline) and on the 512-device production mesh in the dry-run.
+This module re-exports the old names so existing imports keep working.
+``make_distributed_anotherme`` is now a thin adapter over
+:func:`repro.api.sharded.make_sharded_pipeline` with the SSH-shingle key
+function; prefer ``AnotherMeEngine`` with ``ExecutionPlan(n_shards=...)``,
+which also supports the "minhash"/"brp"/"udf" candidate backends on the
+same shard_map machinery.
 """
-from __future__ import annotations
-
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.shingling import shingles_from_types
-from repro.core.similarity import mss_scores, multi_level_lcs
-from repro.core.ssh import _runs, dedup_pairs, pairs_from_rows
-from repro.core.types import PAD_ID, PAD_KEY
-
-_MIX = np.int32(np.uint32(2654435761 % (1 << 31)))  # Knuth multiplicative mix
-
-
-def _positive_hash(x: jnp.ndarray) -> jnp.ndarray:
-    h = (x * _MIX) ^ (x >> 13)
-    return jnp.abs(h)
-
-
-def _pair_hash(lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
-    return jnp.abs(_positive_hash(lo) * np.int32(92821) + _positive_hash(hi))
-
-
-def _route(
-    values: tuple, dest: jnp.ndarray, valid: jnp.ndarray, *, n_shards: int,
-    capacity: int, pads: tuple, axis_name: str,
-):
-    """Scatter rows into [n_shards, capacity] buckets and all_to_all them.
-
-    values: tuple of int32 [R] or [R, W] arrays routed together (rows travel
-    with their payload columns); pads: per-array pad value.
-    Returns (tuple of [n_shards * capacity(, W)] received rows, overflow).
-    """
-    dest = jnp.where(valid, dest, n_shards)  # n_shards = drop bucket
-    order = jnp.argsort(dest, stable=True)
-    dest_s = dest[order]
-    rank, _ = _runs(jnp.where(dest_s == n_shards, PAD_KEY, dest_s))
-    ok = (dest_s < n_shards) & (rank < capacity)
-    slot = jnp.where(ok, dest_s * capacity + rank, n_shards * capacity)
-    overflow = jnp.sum((dest_s < n_shards) & (rank >= capacity))
-    outs = []
-    for v, pad in zip(values, pads):
-        width = v.shape[1:] if v.ndim > 1 else ()
-        buf = jnp.full((n_shards * capacity,) + width, pad, dtype=v.dtype)
-        buf = buf.at[slot].set(v[order], mode="drop")
-        buf = buf.reshape((n_shards, capacity) + width)
-        recv = jax.lax.all_to_all(
-            buf, axis_name, split_axis=0, concat_axis=0, tiled=True
-        )
-        outs.append(recv.reshape((n_shards * capacity,) + width))
-    return tuple(outs), overflow
-
-
-@dataclasses.dataclass(frozen=True)
-class DistributedPlan:
-    n_shards: int
-    local_n: int          # trajectories per shard
-    shingle_route_cap: int  # rows per (src, dst) bucket in shuffle 1
-    local_pair_cap: int     # pre-dedup pairs per shard after local join
-    pair_route_cap: int     # rows per (src, dst) bucket in shuffle 2
-    scored_cap: int         # deduped pairs per shard
-
-
-def plan_capacities(
-    keys_np: np.ndarray, n_shards: int, *, slack: float = 1.3, quiet: bool = True
-) -> DistributedPlan:
-    """Host-side exact capacity planning from the actual shingle keys.
-
-    Mirrors what a Spark driver learns from partition statistics; keeps every
-    device buffer tight instead of worst-case.
-    """
-    n, s = keys_np.shape
-    local_n = int(np.ceil(n / n_shards))
-    keys_flat = keys_np.reshape(-1)
-    ids_flat = np.repeat(np.arange(n, dtype=np.int64), s)
-    valid = keys_flat != PAD_KEY
-    kf, idf = keys_flat[valid], ids_flat[valid]
-    # shuffle 1 loads: rows from one src shard to one dst shard
-    src = idf // local_n
-    mix = np.int64(2654435761)
-    dst = np.abs((kf.astype(np.int64) * mix) ^ (kf.astype(np.int64) >> 13)) % n_shards
-    load1 = np.zeros((n_shards, n_shards), np.int64)
-    np.add.at(load1, (src, dst), 1)
-    cap1 = int(np.ceil(load1.max() * slack)) + 8
-
-    # local join size per dst shard: sum over keys of rank contributions
-    order = np.lexsort((idf, dst, kf))
-    kf_s, dst_s = kf[order], dst[order]
-    run_start = np.ones(kf_s.shape, bool)
-    run_start[1:] = kf_s[1:] != kf_s[:-1]
-    idx = np.arange(kf_s.shape[0])
-    starts = np.maximum.accumulate(np.where(run_start, idx, 0))
-    ranks = idx - starts
-    pair_count = np.zeros(n_shards, np.int64)
-    np.add.at(pair_count, dst_s, ranks)
-    cap2 = int(np.ceil(max(pair_count.max(), 1) * slack)) + 64
-
-    # pair-dedup shuffle + scored caps: bounded by total pre-dedup pairs; a
-    # per-dest exact count would require materializing pairs, so use the
-    # uniform-hash bound with slack (overflow counters catch the rest).
-    total_pairs = int(ranks.sum())
-    cap3 = int(np.ceil(max(total_pairs / (n_shards * n_shards), 1) * slack * 2)) + 64
-    cap4 = int(np.ceil(max(total_pairs / n_shards, 1) * slack * 2)) + 64
-    return DistributedPlan(
-        n_shards=n_shards, local_n=local_n, shingle_route_cap=cap1,
-        local_pair_cap=cap2, pair_route_cap=cap3, scored_cap=cap4,
-    )
-
-
-def make_distributed_anotherme(
-    mesh: jax.sharding.Mesh,
-    plan: DistributedPlan,
-    *,
-    k: int,
-    num_types: int,
-    betas: jnp.ndarray,
-    axis_name: str = "ex",
-    dedup: bool = True,
-    score_mode: str = "replicate",
-):
-    """Build the jitted shard_map pipeline.
-
-    Call signature of the returned fn:
-      fn(places [N, L] int32, lengths [N] int32, codes [N, H, L] int32)
-        -> dict of per-shard stacked outputs:
-           left/right [n, scored_cap], level_lcs [n, scored_cap, H],
-           mss [n, scored_cap], overflow [n, 3]
-
-    score_mode:
-      "replicate" — the encoded table is replicated; each shard scores its
-        deduped pairs locally (fine to ~10M trajectories: the table is
-        N * levels * L * 4 bytes).
-      "shuffle"   — the table stays sharded; two extra all_to_all rounds
-        route each pair to owner(left) then owner(right), attaching the
-        owner's code rows on the way (a Spark broadcast-join vs shuffle-join
-        switch).  Per-device memory is then O(N/shards) — the 1000-node
-        regime.
-    """
-    from jax.sharding import PartitionSpec as P
-
-    n_shards = plan.n_shards
-
-    def shard_fn(places, lengths, codes):
-        # places/lengths: LOCAL rows; codes: replicated ("replicate" mode)
-        # or LOCAL rows ("shuffle" mode).
-        me = jax.lax.axis_index(axis_name).astype(jnp.int32)
-        gid0 = me * plan.local_n
-
-        # phase (i)+(ii)a: shingle from the coarsest level of OUR rows.
-        if score_mode == "replicate":
-            local_types = jax.lax.dynamic_slice_in_dim(
-                codes[:, 0, :], gid0, plan.local_n, axis=0
-            )
-        else:
-            local_types = codes[:, 0, :]
-        keys = shingles_from_types(
-            local_types, lengths, k=k, num_types=num_types, dedup=dedup
-        )  # [local_n, S]
-
-        s = keys.shape[1]
-        flat_keys = keys.reshape(-1)
-        flat_ids = jnp.repeat(jnp.arange(plan.local_n, dtype=jnp.int32) + gid0, s)
-        valid = flat_keys != PAD_KEY
-        dest = _positive_hash(flat_keys) % n_shards
-        (rk, rid), ovf1 = _route(
-            (flat_keys, flat_ids), dest, valid,
-            n_shards=n_shards, capacity=plan.shingle_route_cap,
-            pads=(PAD_KEY, PAD_ID), axis_name=axis_name,
-        )
-
-        # local sort-merge join on received rows
-        lo, hi, ovf2 = pairs_from_rows(rk, rid, pair_capacity=plan.local_pair_cap)
-
-        # shuffle 2: route pairs by pair hash so dedup is globally exact
-        pvalid = lo != PAD_ID
-        pdest = _pair_hash(lo, hi) % n_shards
-        (rlo, rhi), ovf3 = _route(
-            (lo, hi), pdest, pvalid,
-            n_shards=n_shards, capacity=plan.pair_route_cap,
-            pads=(PAD_ID, PAD_ID), axis_name=axis_name,
-        )
-        cand = dedup_pairs(rlo[: plan.scored_cap * n_shards],
-                           rhi[: plan.scored_cap * n_shards])
-        left = cand.left[: plan.scored_cap]
-        right = cand.right[: plan.scored_cap]
-        ovf4 = jnp.maximum(cand.count - plan.scored_cap, 0)
-
-        # phase (iii): scoring
-        if score_mode == "replicate":
-            li = jnp.where(left == PAD_ID, 0, left)
-            ri = jnp.where(right == PAD_ID, 0, right)
-            level_lcs = multi_level_lcs(
-                codes[li], _lengths_of(codes[li]),
-                codes[ri], _lengths_of(codes[ri]),
-            )
-            ovf5 = jnp.zeros((), jnp.int32)
-        else:
-            left, right, codes_l, codes_r, ovf5 = _gather_pair_codes(
-                left, right, codes, gid0, plan, n_shards, axis_name
-            )
-            level_lcs = multi_level_lcs(
-                codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r)
-            )
-        mss = mss_scores(level_lcs, betas)
-        mss = jnp.where(left == PAD_ID, -1.0, mss)
-        overflow = jnp.stack([ovf1 + ovf2, ovf3, ovf4 + ovf5]).astype(jnp.int32)
-        return left, right, level_lcs, mss, overflow
-
-    def _lengths_of(code_rows):
-        # lengths reconstructed from the padding sentinel in level 0
-        return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
-
-    def _gather_pair_codes(left, right, codes_local, gid0, plan, n, axis):
-        """Shuffle-mode scoring: route pairs to owner(left), attach that
-        shard's code rows, then to owner(right), attach, return to a
-        balanced layout (pairs stay wherever owner(right) is — dedup already
-        guaranteed global uniqueness)."""
-        H, L = codes_local.shape[1], codes_local.shape[2]
-        cap = plan.scored_cap  # per-destination capacity per hop
-        # hop 1: to owner(left)
-        (l1, r1), o1 = _route(
-            (left, right), left // plan.local_n, left != PAD_ID,
-            n_shards=n, capacity=cap // n + 64, pads=(PAD_ID, PAD_ID),
-            axis_name=axis,
-        )
-        safe = jnp.where(l1 == PAD_ID, 0, l1 - gid0)
-        cl = codes_local[jnp.clip(safe, 0, plan.local_n - 1)].reshape(
-            l1.shape[0], H * L
-        )
-        # hop 2: to owner(right), payload = left codes
-        (l2, r2, cl2), o2 = _route(
-            (l1, r1, cl), r1 // plan.local_n, l1 != PAD_ID,
-            n_shards=n, capacity=cap // n + 64,
-            pads=(PAD_ID, PAD_ID, 0), axis_name=axis,
-        )
-        safe_r = jnp.where(r2 == PAD_ID, 0, r2 - gid0)
-        cr = codes_local[jnp.clip(safe_r, 0, plan.local_n - 1)]
-        cl_rows = cl2.reshape(l2.shape[0], H, L)
-        # pad/truncate to scored_cap for a stable output shape
-        def fit(x, pad_val):
-            m = x.shape[0]
-            if m >= plan.scored_cap:
-                return x[: plan.scored_cap]
-            padw = [(0, plan.scored_cap - m)] + [(0, 0)] * (x.ndim - 1)
-            return jnp.pad(x, padw, constant_values=pad_val)
-
-        return (fit(l2, PAD_ID), fit(r2, PAD_ID), fit(cl_rows, 0),
-                fit(cr, 0), o1 + o2)
-
-    spec_in = (
-        P(axis_name, None), P(axis_name),
-        P() if score_mode == "replicate" else P(axis_name, None, None),
-    )
-    spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name), P(axis_name))
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out,
-        check_vma=False,
-    )
-
-    @jax.jit
-    def run(places, lengths, codes):
-        left, right, level_lcs, mss, overflow = fn(places, lengths, codes)
-        return {
-            "left": left.reshape(n_shards, -1),
-            "right": right.reshape(n_shards, -1),
-            "level_lcs": level_lcs.reshape(n_shards, plan.scored_cap, -1),
-            "mss": mss.reshape(n_shards, -1),
-            "overflow": overflow.reshape(n_shards, -1),
-        }
-
-    return run
-
-
-def gather_similar_pairs(out: dict, rho: float) -> set[tuple[int, int]]:
-    """Host-side collection of the globally-deduped similar pair set."""
-    left = np.asarray(out["left"]).reshape(-1)
-    right = np.asarray(out["right"]).reshape(-1)
-    mss = np.asarray(out["mss"]).reshape(-1)
-    keep = (left != PAD_ID) & (mss > rho)
-    return {(int(a), int(b)) for a, b in zip(left[keep], right[keep])}
-
-
-def pad_to_shards(places: np.ndarray, lengths: np.ndarray, n_shards: int):
-    """Pad N up to a multiple of n_shards with empty trajectories."""
-    n = places.shape[0]
-    n_pad = (-n) % n_shards
-    if n_pad:
-        places = np.concatenate(
-            [places, np.full((n_pad, places.shape[1]), -1, places.dtype)]
-        )
-        lengths = np.concatenate([lengths, np.zeros((n_pad,), lengths.dtype)])
-    return places, lengths
+from repro.api.sharded import (  # noqa: F401
+    DistributedPlan,
+    _pair_hash,
+    _positive_hash,
+    _route,
+    gather_similar_pairs,
+    make_distributed_anotherme,
+    make_sharded_pipeline,
+    pad_to_shards,
+    plan_capacities,
+)

@@ -1,33 +1,47 @@
-"""AnotherMe end-to-end orchestration (paper section IV.4, Fig. 2).
+"""Legacy AnotherMe entry point — deprecation shim over ``repro.api``.
 
-Single-process driver: encode -> shingle -> SSH join -> score -> threshold ->
-communities, with host-side capacity planning (static pair buffers sized from
-the exact join cardinality, doubled on overflow) and per-phase wall timing so
-the benchmark harness can reproduce the paper's Fig. 7/9 breakdowns.
+``run_anotherme`` / ``AnotherMeConfig`` predate the composable engine; they
+now delegate to :class:`repro.api.AnotherMeEngine` so there is exactly one
+implementation of the pipeline.  New code should use the engine directly:
 
-The distributed (shard_map) version lives in core/distributed.py and reuses
-the same phase functions.
+    from repro.api import AnotherMeEngine, EngineConfig
+    result = AnotherMeEngine(forest, EngineConfig()).run(batch)
+
+Behavioural fixes folded into the shim (ISSUE 1 satellites):
+
+* ``lcs_impl="ref"`` now actually runs the reference DP (it used to be
+  silently rewritten to "wavefront"), and unknown impl names raise a
+  ValueError listing the valid options.
+* The ``candidate_fn`` branch reports ``t_candidates`` (and no longer books
+  the baseline's hash cost under ``t_shingle``), so Fig. 9-style breakdowns
+  attribute hash cost correctly for every approach.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.encoding import SemanticForest
+from repro.core.types import ScoredPairs, TrajectoryBatch
 
-from repro.core import communities as comm
-from repro.core.encoding import SemanticForest, encode_batch, forest_tables, type_codes
-from repro.core.shingling import shingles_from_types
-from repro.core.similarity import default_betas, score_pairs
-from repro.core.ssh import exact_pair_count, ssh_candidates
-from repro.core.types import PAD_ID, ScoredPairs, TrajectoryBatch
+
+@dataclasses.dataclass
+class AnotherMeResult:
+    """Pipeline output: scored pairs + the paper's two result sets.
+
+    Shared with the new API (``repro.api.EngineResult`` is an alias).
+    """
+
+    scored: ScoredPairs
+    similar_pairs: set
+    communities: set
+    stats: dict
 
 
 @dataclasses.dataclass(frozen=True)
 class AnotherMeConfig:
+    """Legacy config; maps 1:1 onto :class:`repro.api.EngineConfig`."""
+
     k: int = 3                      # shingle order (paper default 3)
     rho: float = 2.0                # similarity threshold (paper default 2)
     betas: tuple | None = None      # level weights; None -> uniform 1/n
@@ -37,17 +51,15 @@ class AnotherMeConfig:
     community_mode: str = "cliques"  # "cliques" | "components"
     max_retries: int = 3
 
+    def as_engine_config(self, backend: str = "ssh"):
+        from repro.api.engine import EngineConfig
 
-@dataclasses.dataclass
-class AnotherMeResult:
-    scored: ScoredPairs
-    similar_pairs: set
-    communities: set
-    stats: dict
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(10, int(np.ceil(np.log2(max(x, 1)))))
+        return EngineConfig(
+            k=self.k, rho=self.rho, betas=self.betas, backend=backend,
+            lcs_impl=self.lcs_impl, pair_capacity=self.pair_capacity,
+            capacity_slack=self.capacity_slack,
+            community_mode=self.community_mode, max_retries=self.max_retries,
+        )
 
 
 def run_anotherme(
@@ -57,115 +69,17 @@ def run_anotherme(
     *,
     candidate_fn: Callable | None = None,
 ) -> AnotherMeResult:
-    """Run the full pipeline on one device.
+    """Run the full pipeline on one device (deprecated shim).
 
-    ``candidate_fn`` optionally swaps the SSH join for a baseline hash
-    (MinHash / BRP) while keeping every other phase identical — this is how
-    the accuracy benchmarks isolate the hash function, as the paper does.
+    ``candidate_fn`` optionally swaps the SSH join for a baseline hash while
+    keeping every other phase identical.  Prefer the registry instead:
+    ``AnotherMeEngine(forest, EngineConfig(backend="minhash"))``.
     """
-    stats: dict = {}
-    tables = forest_tables(forest)
-    betas = (
-        jnp.asarray(config.betas, jnp.float32)
-        if config.betas is not None
-        else default_betas(forest.num_levels)
+    from repro.api.backends import CallableBackend
+    from repro.api.engine import AnotherMeEngine
+
+    backend = CallableBackend(candidate_fn) if candidate_fn is not None else None
+    engine = AnotherMeEngine(
+        forest, config.as_engine_config(), backend=backend
     )
-
-    t0 = time.perf_counter()
-    encoded = encode_batch(batch, tables)
-    encoded.codes.block_until_ready()
-    stats["t_encode"] = time.perf_counter() - t0
-
-    # --- phase (ii): shingling + join --------------------------------------
-    t0 = time.perf_counter()
-    if candidate_fn is None:
-        keys = shingles_from_types(
-            type_codes(encoded), batch.lengths, k=config.k,
-            num_types=forest.num_types,
-        )
-        keys.block_until_ready()
-        stats["t_shingle"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        cap = config.pair_capacity
-        if cap is None:
-            cap = _next_pow2(int(exact_pair_count(keys) * config.capacity_slack))
-        cand = ssh_candidates(keys, pair_capacity=cap)
-        for _ in range(config.max_retries):
-            if int(cand.overflow) == 0:
-                break
-            cap *= 2
-            cand = ssh_candidates(keys, pair_capacity=cap)
-        stats["pair_capacity"] = cap
-    else:
-        cand = candidate_fn(encoded, batch)
-        stats["t_shingle"] = time.perf_counter() - t0
-        t0 = time.perf_counter()
-    cand.left.block_until_ready()
-    stats["t_join"] = time.perf_counter() - t0
-    stats["num_candidates"] = int(cand.count)
-    stats["join_overflow"] = int(cand.overflow)
-
-    # --- phase (iii): similarity scoring ------------------------------------
-    t0 = time.perf_counter()
-    level_lcs, mss = score_pairs(
-        encoded.codes, encoded.lengths, cand.left, cand.right, betas,
-        impl_name="wavefront" if config.lcs_impl == "ref" else config.lcs_impl,
-    ) if config.lcs_impl != "kernel" else _score_with_kernel(
-        encoded, cand, betas
-    )
-    mss.block_until_ready()
-    stats["t_score"] = time.perf_counter() - t0
-
-    valid = np.asarray(cand.left) != PAD_ID
-    mss_np = np.asarray(mss)
-    similar_mask = valid & (mss_np > config.rho)
-    left_np = np.asarray(cand.left)
-    right_np = np.asarray(cand.right)
-    similar_pairs = {
-        (int(a), int(b))
-        for a, b in zip(left_np[similar_mask], right_np[similar_mask])
-    }
-    stats["num_similar"] = len(similar_pairs)
-
-    scored = ScoredPairs(
-        left=cand.left, right=cand.right, level_lcs=level_lcs, mss=mss,
-        count=cand.count, overflow=cand.overflow,
-    )
-
-    # --- phase (iv): communities --------------------------------------------
-    t0 = time.perf_counter()
-    if config.community_mode == "cliques":
-        communities = comm.maximal_cliques(similar_pairs)
-    else:
-        sl = jnp.asarray(left_np[similar_mask])
-        sr = jnp.asarray(right_np[similar_mask])
-        labels = comm.connected_components(
-            sl, sr, num_nodes=batch.num_trajectories
-        )
-        communities = comm.components_as_sets(np.asarray(labels))
-    stats["t_communities"] = time.perf_counter() - t0
-    stats["num_communities"] = len(communities)
-    stats["t_total"] = sum(v for k, v in stats.items() if k.startswith("t_"))
-
-    return AnotherMeResult(
-        scored=scored, similar_pairs=similar_pairs, communities=communities,
-        stats=stats,
-    )
-
-
-def _score_with_kernel(encoded, cand, betas):
-    """Score candidates with the Pallas LCS kernel (kernels/lcs)."""
-    from repro.kernels.lcs import ops as lcs_ops
-    from repro.core.similarity import mss_scores
-    from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
-    from repro.core.similarity import repad
-
-    li = jnp.where(cand.left == PAD_ID, 0, cand.left)
-    ri = jnp.where(cand.right == PAD_ID, 0, cand.right)
-    P = li.shape[0]
-    H, L = encoded.codes.shape[1], encoded.codes.shape[2]
-    a = repad(encoded.codes[li], encoded.lengths[li], PAD_CODE_A).reshape(P * H, L)
-    b = repad(encoded.codes[ri], encoded.lengths[ri], PAD_CODE_B).reshape(P * H, L)
-    level_lcs = lcs_ops.lcs(a, b).reshape(P, H)
-    return level_lcs, mss_scores(level_lcs, betas)
+    return engine.run(batch)

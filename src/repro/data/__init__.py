@@ -1,2 +1,3 @@
 from repro.data.synthetic import synthetic_trajectories, synthetic_setup
 from repro.data.geolife import geolife_surrogate
+from repro.data.fig1 import fig1_world

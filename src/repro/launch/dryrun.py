@@ -302,9 +302,15 @@ def _state_shardings(state_sds, p_sh, mesh):
 
 
 def lower_anotherme(multi_pod: bool, n_traj: int = 1_048_576, L: int = 16):
-    """The paper's own workload on the flat executor mesh (512 devices)."""
-    import numpy as np
-    from repro.core.distributed import DistributedPlan, make_distributed_anotherme
+    """The paper's own workload on the flat executor mesh (512 devices).
+
+    Uses the engine API's sharded building blocks directly (the capacity
+    plan is hand-set for the 1M-trajectory shape, so no data pass is
+    needed); the "ssh" registry backend supplies the on-device key_fn.
+    """
+    from repro.api import (
+        BackendContext, DistributedPlan, get_backend, make_sharded_pipeline,
+    )
     from repro.core.similarity import default_betas
 
     mesh = make_executor_mesh(512 if multi_pod else 256)
@@ -316,8 +322,10 @@ def lower_anotherme(multi_pod: bool, n_traj: int = 1_048_576, L: int = 16):
         shingle_route_cap=int(local_n * S / n_shards * 1.3) + 64,
         local_pair_cap=1 << 18, pair_route_cap=1 << 12, scored_cap=1 << 18,
     )
-    run = make_distributed_anotherme(
-        mesh, plan, k=3, num_types=300, betas=default_betas(3)
+    backend = get_backend("ssh")
+    key_fn = backend.shard_key_fn(BackendContext(k=3, num_types=300))
+    run = make_sharded_pipeline(
+        mesh, plan, betas=default_betas(3), key_fn=key_fn
     )
     from jax.sharding import NamedSharding, PartitionSpec as P
 

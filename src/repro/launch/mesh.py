@@ -15,20 +15,21 @@ AnotherMe analytics plane (trajectory shards == Spark executors).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_executor_mesh(n_devices: int | None = None):
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), ("ex",), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((n,), ("ex",))
 
 
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))

@@ -46,10 +46,9 @@ def resolve_config(name: str, reduced: bool) -> ModelConfig:
 
 def make_mesh_for_devices():
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.core import compat
+
+    return compat.make_mesh((n, 1), ("data", "model"))
 
 
 def train(args) -> dict:

@@ -106,7 +106,9 @@ def moe_block(x, p, cfg: ModelConfig, mesh: Mesh):
         aux = jax.lax.pmean(aux, "model")
         return out.reshape(xl.shape), aux
 
-    fn = jax.shard_map(
+    from repro.core import compat
+
+    fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(
@@ -115,7 +117,6 @@ def moe_block(x, p, cfg: ModelConfig, mesh: Mesh):
             P("model", None, None),
         ),
         out_specs=(P(dp, None, None), P()),
-        check_vma=False,
     )
     out, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 

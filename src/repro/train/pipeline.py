@@ -64,9 +64,9 @@ def pipeline_apply(stage_fn, stage_params, x_micro, mesh: Mesh,
             jnp.where(s == n_stages - 1, out, jnp.zeros_like(out)), axis
         )
 
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False,
+    from repro.core import compat
+
+    fn = compat.shard_map(
+        shard_fn, mesh=mesh, in_specs=(P(axis), P()), out_specs=P()
     )
     return fn(stage_params, x_micro)

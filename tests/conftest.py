@@ -29,9 +29,6 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
 
 @pytest.fixture
 def smoke_mesh():
-    import jax
+    from repro.core import compat
 
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((1, 1), ("data", "model"))

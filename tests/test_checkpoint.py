@@ -128,7 +128,8 @@ from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_s
 
 ckpt_dir = sys.argv[1] if len(sys.argv) > 1 else "%CKPT%"
 n = len(jax.devices())
-mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core import compat
+mesh = compat.make_mesh((n,), ("data",))
 tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
 step = latest_step(ckpt_dir)
 if step is None:

@@ -29,8 +29,8 @@ enc = encode_batch(bp, tables)
 keys_np = np.asarray(shingles_from_types(
     enc.codes[:, 0, :], bp.lengths, k=3, num_types=forest.num_types))
 plan = plan_capacities(keys_np, n_shards)
-mesh = jax.make_mesh((n_shards,), ("ex",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core import compat
+mesh = compat.make_mesh((n_shards,), ("ex",))
 run = make_distributed_anotherme(
     mesh, plan, k=3, num_types=forest.num_types, betas=default_betas(3))
 out = run(bp.places, bp.lengths, enc.codes)
@@ -68,15 +68,16 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.train.compression import compressed_psum
 
-mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core import compat
+mesh = compat.make_mesh((8,), ("dp",))
 rng = np.random.default_rng(0)
 x = rng.normal(size=(8, 4, 300)).astype(np.float32)
 
 def f(xl):
     return compressed_psum(xl, "dp")
 
-out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("dp", None, None),
-              out_specs=P("dp", None, None), check_vma=False))(jnp.asarray(x))
+out = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("dp", None, None),
+              out_specs=P("dp", None, None)))(jnp.asarray(x))
 want = x.sum(axis=0, keepdims=True)
 got = np.asarray(out)[0:1]
 rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)

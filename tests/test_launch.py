@@ -33,13 +33,14 @@ def test_collective_parser_on_real_hlo():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_analysis import collective_bytes
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core import compat
+mesh = compat.make_mesh((8,), ("x",))
 
 def f(a):
     return jax.lax.psum(a, "x")
 
-fn = jax.shard_map(f, mesh=mesh, in_specs=P("x", None), out_specs=P(None, None),
-                   check_vma=False)
+fn = compat.shard_map(f, mesh=mesh, in_specs=P("x", None),
+                      out_specs=P(None, None))
 a = jax.ShapeDtypeStruct((8, 128), jnp.float32,
                          sharding=NamedSharding(mesh, P("x", None)))
 comp = jax.jit(fn).lower(a).compile()

@@ -7,8 +7,8 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.train.pipeline import pipeline_apply
 
 n_stages, n_micro, mb, d = 4, 6, 2, 16
-mesh = jax.make_mesh((n_stages,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core import compat
+mesh = compat.make_mesh((n_stages,), ("stage",))
 rng = np.random.default_rng(0)
 Ws = jnp.asarray(rng.normal(scale=0.3, size=(n_stages, d, d)).astype(np.float32))
 bs = jnp.asarray(rng.normal(scale=0.1, size=(n_stages, d)).astype(np.float32))
