@@ -37,6 +37,6 @@ from repro.api.sharded import (
     make_sharded_pipeline, pad_to_shards, plan_capacities,
 )
 from repro.api.stages import (
-    CandidateStage, CommunitiesStage, EncodeStage, PipelineContext, ScoreStage,
-    Stage, validate_lcs_impl,
+    LCS_IMPLS, CandidateStage, CommunitiesStage, EncodeStage, PipelineContext,
+    ScoreStage, Stage, lcs_impl_fn, validate_lcs_impl,
 )

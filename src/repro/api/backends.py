@@ -64,7 +64,15 @@ class CandidateBackend:
     def join_keys(
         self, encoded: EncodedBatch, batch: TrajectoryBatch, ctx: BackendContext
     ) -> jnp.ndarray:
-        """PAD_KEY-padded int32 join keys [N, S]."""
+        """PAD_KEY-padded int32 join keys [N, S].
+
+        Sharded note: for capacity planning the engine calls this with a
+        *coarsest-level view* — ``encoded.codes`` is [N, 1, L] holding only
+        the type codes (the full table stays device-resident).  Keys must
+        therefore derive from ``type_codes(encoded)`` + lengths, which is
+        what every registered backend does; the on-device ``shard_key_fn``
+        then rebuilds the identical keys from the in-mesh encodings.
+        """
         raise NotImplementedError
 
     def expected_pairs(self, keys: jnp.ndarray) -> int:
@@ -83,7 +91,12 @@ class CandidateBackend:
         return ssh_candidates(jnp.asarray(keys), pair_capacity=pair_capacity)
 
     def shard_key_fn(self, ctx: BackendContext) -> Callable | None:
-        """(local_type_codes [n, L], local_lengths [n]) -> keys [n, S]."""
+        """(local_type_codes [n, L], local_lengths [n]) -> keys [n, S].
+
+        Runs per shard inside the shard_map program; the type codes it
+        consumes are encoded in-mesh from the shard's own places, so a
+        key-producing backend never touches host-side encodings at all.
+        """
         return None
 
 
@@ -173,9 +186,10 @@ class UDFBackend(CandidateBackend):
     """The "user-defined" black box: shingle keys built row-at-a-time in
     host Python (same base-Q perfect hash as "ssh", so the results are
     bit-identical), invisible to XLA.  ``shard_key_fn`` is None: in sharded
-    mode the engine computes these keys on the driver and shuffles them in,
-    mirroring how a Spark UDF forces data through the driver-side bytecode
-    wall the paper measures in Fig. 7.
+    mode the engine computes these keys on the driver (from the
+    coarsest-level planning view) and shuffles them in, mirroring how a
+    Spark UDF forces data through the driver-side bytecode wall the paper
+    measures in Fig. 7 — encoding itself still runs in-mesh even here.
     """
 
     name: str = dataclasses.field(default="udf", init=False)

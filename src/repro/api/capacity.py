@@ -52,3 +52,27 @@ class CapacityPlanner:
             capacity *= 2
             cand = build(capacity)
         return cand, capacity
+
+    def plan_sharded(
+        self,
+        keys_np,
+        n_shards: int,
+        *,
+        slack: float | None = None,
+        score_mode: str = "replicate",
+    ):
+        """Exact per-bucket capacity plan for the sharded (shard_map) path.
+
+        Delegates to :func:`repro.api.sharded.plan_capacities`, which sizes
+        every stage — shuffle 1, the local join, the pair-dedup shuffle and
+        (for ``score_mode="shuffle"``) the per-owner code-gather hops — from
+        actual per-destination loads under the device's own hashes, not a
+        uniform-hash bound.  ``slack`` defaults to this planner's slack.
+        """
+        from repro.api.sharded import plan_capacities
+
+        return plan_capacities(
+            keys_np, n_shards,
+            slack=self.slack if slack is None else slack,
+            score_mode=score_mode,
+        )

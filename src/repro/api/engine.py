@@ -12,16 +12,18 @@
 The engine composes the typed stages of api/stages.py — Encode, Candidate,
 Score, Communities — and selects single-device jit or shard_map execution
 from a single :class:`ExecutionPlan` instead of two divergent code paths:
-with ``n_shards > 1`` the Candidate+Score stages are replaced by one fused
-shard_map stage (api/sharded.py) while Encode and Communities are shared
-verbatim.  Candidate generation is chosen by registry name (api/backends.py)
-and capacity policy lives in the shared CapacityPlanner (api/capacity.py);
-phase timing is collected by the instrumentation wrapper so the stage logic
-itself stays pure and jit-cacheable across repeated runs with identical
-static shapes.
+with ``n_shards > 1`` the Encode+Candidate+Score stages are replaced by one
+fused device-resident shard_map stage (api/sharded.py) while Communities is
+shared verbatim — raw trajectories are sharded once, encoding runs in-mesh,
+and the code table never materializes replicated on the host.  Candidate
+generation is chosen by registry name (api/backends.py) and capacity policy
+lives in the shared CapacityPlanner (api/capacity.py); phase timing is
+collected by the instrumentation wrapper so the stage logic itself stays
+pure and jit-cacheable across repeated runs with identical static shapes.
 
-Sharded scoring always uses the wavefront LCS (``lcs_impl`` selects the
-implementation on the single-device path only).
+``lcs_impl`` (EngineConfig, overridable per ExecutionPlan) selects the LCS
+implementation on BOTH paths: the Pallas kernel runs inside shard_map
+exactly as it does under single-device jit.
 """
 from __future__ import annotations
 
@@ -38,17 +40,17 @@ from repro.api.backends import (
 from repro.api.capacity import CapacityPlanner
 from repro.api.instrumentation import Instrumentation
 from repro.api.sharded import (
-    gather_similar_pairs, make_sharded_pipeline, pad_to_shards, plan_capacities,
+    gather_similar_pairs, make_sharded_pipeline, pad_to_shards,
 )
 from repro.api.stages import (
     CandidateStage, CommunitiesStage, EncodeStage, PipelineContext, ScoreStage,
     validate_lcs_impl,
 )
 from repro.core import compat
-from repro.core.encoding import SemanticForest, forest_tables
+from repro.core.encoding import SemanticForest, encode_types, forest_tables
 from repro.core.pipeline import AnotherMeResult as EngineResult
 from repro.core.similarity import default_betas
-from repro.core.types import PAD_ID, ScoredPairs, TrajectoryBatch
+from repro.core.types import EncodedBatch, PAD_ID, ScoredPairs, TrajectoryBatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +62,8 @@ class EngineConfig:
     betas: tuple | None = None      # level weights; None -> uniform 1/n
     backend: str = "ssh"            # candidate backend registry name
     backend_options: Mapping | None = None  # kwargs for the backend factory
-    lcs_impl: str = "wavefront"     # "wavefront" | "ref" | "kernel"
+    lcs_impl: str = "wavefront"     # "wavefront" | "ref" | "kernel" |
+    #                                 "pallas" | "pallas-interpret"
     pair_capacity: int | None = None  # None -> plan from exact join size
     capacity_slack: float = 1.10
     community_mode: str = "cliques"  # "cliques" | "components"
@@ -81,6 +84,8 @@ class ExecutionPlan:
     axis_name: str = "ex"
     devices: tuple | None = None    # default: jax.devices()[:n_shards]
     shard_slack: float = 1.3        # slack for the sharded capacity plan
+    lcs_impl: str | None = None     # override EngineConfig.lcs_impl (both
+    #                                 execution paths); None -> use config
 
 
 class AnotherMeEngine:
@@ -100,6 +105,11 @@ class AnotherMeEngine:
         *,
         backend: CandidateBackend | None = None,
     ):
+        if plan.lcs_impl is not None:
+            # the plan's override folds into the config so every stage —
+            # single-device ScoreStage or the fused shard_map stage — reads
+            # one authoritative lcs_impl
+            config = dataclasses.replace(config, lcs_impl=plan.lcs_impl)
         validate_lcs_impl(config.lcs_impl)
         if plan.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {plan.n_shards}")
@@ -130,8 +140,9 @@ class AnotherMeEngine:
                 EncodeStage(), CandidateStage(), ScoreStage(), CommunitiesStage(),
             )
         else:
+            # encoding folds into the shard_map program: no host EncodeStage
             self._stages = (
-                EncodeStage(), _ShardedCandidateScoreStage(self), CommunitiesStage(),
+                _ShardedEncodeJoinScoreStage(self), CommunitiesStage(),
             )
         self._mesh = None
         self._runner_cache: dict = {}
@@ -185,28 +196,35 @@ class AnotherMeEngine:
         return self._mesh
 
     def _sharded_runner(self, dplan, key_fn, shapes):
-        cache_key = (dplan, self.plan.score_mode, key_fn is None, shapes)
+        cache_key = (
+            dplan, self.plan.score_mode, self.config.lcs_impl,
+            key_fn is None, shapes,
+        )
         runner = self._runner_cache.get(cache_key)
         if runner is None:
             runner = make_sharded_pipeline(
                 self.mesh(), dplan, betas=self.betas, key_fn=key_fn,
                 axis_name=self.plan.axis_name, score_mode=self.plan.score_mode,
+                lcs_impl=self.config.lcs_impl,
             )
             self._runner_cache[cache_key] = runner
         return runner
 
 
-class _ShardedCandidateScoreStage:
-    """Candidate + Score fused into one shard_map program (Fig. 5).
+class _ShardedEncodeJoinScoreStage:
+    """Encode + Candidate + Score fused into one shard_map program (Fig. 5).
 
-    Join keys are planned host-side from the backend's actual keys
-    (plan_capacities); key-producing backends rebuild them on-device per
-    shard, key-less ones ("udf") have their host keys shuffled in.  A
-    capacity bust retries with doubled buffers, like the single-device
-    planner.
+    The device program is fully resident: raw places are sharded once,
+    encoding runs in-mesh, and the code table never transits the host.
+    Capacity planning works from the coarsest-level ("type") view only — a
+    single [N, L] host gather, the driver's statistics pass — from which the
+    backend's actual join keys are built (plan_sharded); key-producing
+    backends rebuild keys on-device per shard, key-less ones ("udf") have
+    their host keys shuffled in.  A capacity bust retries with doubled
+    buffers, like the single-device planner.
     """
 
-    name = "sharded_join_score"
+    name = "sharded_encode_join_score"
 
     def __init__(self, engine: AnotherMeEngine):
         self.engine = engine
@@ -216,18 +234,26 @@ class _ShardedCandidateScoreStage:
         plan, config, instr = eng.plan, eng.config, ctx.instr
 
         with instr.phase("keys"):
-            keys = ctx.backend.join_keys(ctx.encoded, ctx.batch, ctx.backend_ctx)
+            # coarsest-level view for planning only: [N, L], not the
+            # [N, n_levels, L] code table (which stays device-resident)
+            types = encode_types(ctx.batch.places, ctx.tables)
+            plan_encoded = EncodedBatch(codes=types[:, None, :],
+                                        lengths=ctx.batch.lengths)
+            keys = ctx.backend.join_keys(plan_encoded, ctx.batch,
+                                         ctx.backend_ctx)
             keys_np = np.asarray(keys)
         ctx.keys = keys
 
         # plan capacities host-side once per distinct key matrix; warm runs
         # (same data) skip the numpy planning pass and any retry doublings
         with instr.phase("plan"):
-            plan_key = (keys_np.shape, hash(keys_np.tobytes()))
+            plan_key = (keys_np.shape, hash(keys_np.tobytes()),
+                        plan.score_mode)
             dplan = eng._plan_cache.get(plan_key)
             if dplan is None:
-                dplan = plan_capacities(
-                    keys_np, plan.n_shards, slack=plan.shard_slack
+                dplan = eng.planner.plan_sharded(
+                    keys_np, plan.n_shards, slack=plan.shard_slack,
+                    score_mode=plan.score_mode,
                 )
         key_fn = ctx.backend.shard_key_fn(ctx.backend_ctx)
 
@@ -259,13 +285,12 @@ class _ShardedCandidateScoreStage:
 
     def _execute(self, ctx, dplan, key_fn, keys_np):
         eng = self.engine
-        first = (
-            jnp.asarray(keys_np) if key_fn is None else ctx.batch.places
-        )
-        shapes = (first.shape, ctx.encoded.codes.shape)
+        batch = ctx.batch
+        first = jnp.asarray(keys_np) if key_fn is None else batch.places
+        shapes = (first.shape, batch.places.shape, ctx.tables.shape)
         for attempt in range(eng.planner.max_retries + 1):
             runner = eng._sharded_runner(dplan, key_fn, shapes)
-            out = runner(first, ctx.batch.lengths, ctx.encoded.codes)
+            out = runner(first, batch.places, batch.lengths, ctx.tables)
             out["mss"].block_until_ready()
             if int(np.asarray(out["overflow"]).sum()) == 0:
                 break
@@ -276,5 +301,6 @@ class _ShardedCandidateScoreStage:
                     local_pair_cap=dplan.local_pair_cap * 2,
                     pair_route_cap=dplan.pair_route_cap * 2,
                     scored_cap=dplan.scored_cap * 2,
+                    owner_route_cap=dplan.owner_route_cap * 2,
                 )
         return out, dplan

@@ -3,25 +3,34 @@
 Every Spark stage of the paper's Fig. 5 has a direct analogue here:
 
   Spark executors            -> devices on a flat "ex" mesh axis
+  semantic encoding (D2->D3) -> in-mesh gather through the replicated
+                                forest tables: each shard encodes its OWN
+                                rows, so the [N, n_levels, L] code table
+                                never materializes on the host
   hash-shuffle on shingle    -> lax.all_to_all of fixed-capacity buckets
     (D4 repartition)            routed by hash(join key) % n_shards
   local sort-merge join      -> ssh.pairs_from_rows on received rows
   shuffle pairs for dedup    -> second all_to_all routed by hash(lo, hi)
     ("score each pair once")    so every pair lands on exactly ONE shard;
                                 the local dedup is then globally exact
-  executor-local scoring     -> batched wavefront LCS on local pairs
+  executor-local scoring     -> batched LCS on local pairs, through the
+                                same ``lcs_impl`` selection as the
+                                single-device path (wavefront / ref /
+                                Pallas kernel)
 
 What the redesign adds over the original ``core/distributed.py``: the join
 key construction is pluggable.  ``key_fn`` (from a registry backend's
 ``shard_key_fn``) builds keys on-device per shard — shingles for "ssh",
-band signatures for "minhash", bucket projections for "brp".  With
-``key_fn=None`` the keys are precomputed host-side and shuffled in as a
-sharded input (the "udf" backend's driver-side wall).  Everything after
-the keys — route, join, dedup, score — is one shared implementation.
+band signatures for "minhash", bucket projections for "brp" — always from
+the shard's in-mesh encoded codes.  With ``key_fn=None`` the keys are
+precomputed host-side and shuffled in as a sharded input (the "udf"
+backend's driver-side wall).  Everything after the keys — route, join,
+dedup, score — is one shared implementation.
 
 Static capacities (rows per destination bucket, pairs per shard) are planned
-host-side from exact cardinalities (plan_capacities) and every stage carries
-an overflow counter, so a capacity bust is detected, never silent.
+host-side from exact cardinalities (plan_capacities) using the *same* int32
+hashes the device program applies, and every stage carries an overflow
+counter, so a capacity bust is detected, never silent.
 
 The same code runs on 1 device (n_shards=1 degenerates to the single-device
 pipeline) and on the 512-device production mesh in the dry-run.
@@ -36,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compat
+from repro.core.encoding import encode_codes
 from repro.core.shingling import shingles_from_types
 from repro.core.similarity import mss_scores, multi_level_lcs
 from repro.core.ssh import _runs, dedup_pairs, pairs_from_rows
@@ -51,6 +61,21 @@ def _positive_hash(x: jnp.ndarray) -> jnp.ndarray:
 
 def _pair_hash(lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
     return jnp.abs(_positive_hash(lo) * np.int32(92821) + _positive_hash(hi))
+
+
+def _positive_hash_np(x: np.ndarray) -> np.ndarray:
+    """Host replica of :func:`_positive_hash` with exact int32 wraparound, so
+    capacity planning sees the same shard destinations as the device."""
+    x = np.asarray(x).astype(np.int32)
+    with np.errstate(over="ignore"):
+        h = (x * _MIX) ^ (x >> 13)
+    return np.abs(h)
+
+
+def _pair_hash_np(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        h = _positive_hash_np(lo) * np.int32(92821) + _positive_hash_np(hi)
+    return np.abs(h)
 
 
 def _route(
@@ -91,16 +116,33 @@ class DistributedPlan:
     local_pair_cap: int     # pre-dedup pairs per shard after local join
     pair_route_cap: int     # rows per (src, dst) bucket in shuffle 2
     scored_cap: int         # deduped pairs per shard
+    owner_route_cap: int = 0  # rows per (src, dst) bucket in the shuffle-mode
+    #                           owner hops; 0 -> uniform fallback
 
 
 def plan_capacities(
-    keys_np: np.ndarray, n_shards: int, *, slack: float = 1.3, quiet: bool = True
+    keys_np: np.ndarray,
+    n_shards: int,
+    *,
+    slack: float = 1.3,
+    quiet: bool = True,
+    score_mode: str = "replicate",
+    exact_pair_limit: int = 5_000_000,
 ) -> DistributedPlan:
     """Host-side exact capacity planning from the actual join keys.
 
     Mirrors what a Spark driver learns from partition statistics; keeps every
     device buffer tight instead of worst-case.  Works for any backend's keys
     (shingles, minhash bands, brp buckets): only PAD_KEY rows are excluded.
+
+    All shard destinations are computed with the device's own int32 hashes
+    (:func:`_positive_hash_np` / :func:`_pair_hash_np`), so per-bucket loads
+    are exact even for adversarially skewed key distributions — including
+    the pair-dedup shuffle and, with ``score_mode="shuffle"``, the per-owner
+    loads of the two code-gather hops (ROADMAP "shuffle 1"-style planning
+    for every stage).  Above ``exact_pair_limit`` pre-dedup pairs the pair
+    list is not materialized and the uniform-hash bound takes over (the
+    overflow counters + retry doubling still catch any bust).
     """
     n, s = keys_np.shape
     local_n = int(np.ceil(n / n_shards))
@@ -110,15 +152,15 @@ def plan_capacities(
     kf, idf = keys_flat[valid], ids_flat[valid]
     # shuffle 1 loads: rows from one src shard to one dst shard
     src = idf // local_n
-    mix = np.int64(2654435761)
-    dst = np.abs((kf.astype(np.int64) * mix) ^ (kf.astype(np.int64) >> 13)) % n_shards
+    dst = _positive_hash_np(kf) % n_shards
     load1 = np.zeros((n_shards, n_shards), np.int64)
     np.add.at(load1, (src, dst), 1)
     cap1 = int(np.ceil(load1.max() * slack)) + 8
 
     # local join size per dst shard: sum over keys of rank contributions
-    order = np.lexsort((idf, dst, kf))
-    kf_s, dst_s = kf[order], dst[order]
+    order = np.lexsort((idf, kf))
+    kf_s, idf_s = kf[order], idf[order]
+    dst_s = dst[order]
     run_start = np.ones(kf_s.shape, bool)
     run_start[1:] = kf_s[1:] != kf_s[:-1]
     idx = np.arange(kf_s.shape[0])
@@ -128,15 +170,63 @@ def plan_capacities(
     np.add.at(pair_count, dst_s, ranks)
     cap2 = int(np.ceil(max(pair_count.max(), 1) * slack)) + 64
 
-    # pair-dedup shuffle + scored caps: bounded by total pre-dedup pairs; a
-    # per-dest exact count would require materializing pairs, so use the
-    # uniform-hash bound with slack (overflow counters catch the rest).
     total_pairs = int(ranks.sum())
-    cap3 = int(np.ceil(max(total_pairs / (n_shards * n_shards), 1) * slack * 2)) + 64
-    cap4 = int(np.ceil(max(total_pairs / n_shards, 1) * slack * 2)) + 64
+    owner_cap = 0
+    if total_pairs <= exact_pair_limit:
+        # materialize the pre-dedup pair list host-side (the driver's
+        # statistics pass): element at sorted position p with in-run rank r
+        # pairs with the r earlier members of its key run
+        rows = np.repeat(idx, ranks)
+        excl = np.cumsum(ranks) - ranks
+        t = np.arange(rows.shape[0], dtype=np.int64) - np.repeat(excl, ranks)
+        partners = rows - np.repeat(ranks, ranks) + t
+        a_ids, b_ids = idf_s[rows], idf_s[partners]
+        lo = np.minimum(a_ids, b_ids).astype(np.int32)
+        hi = np.maximum(a_ids, b_ids).astype(np.int32)
+        # shuffle 2 loads: pairs travel from their join shard to their
+        # pair-hash dedup shard (self-pairs still occupy route slots)
+        src2 = dst_s[rows]
+        dst2 = _pair_hash_np(lo, hi) % n_shards
+        load2 = np.zeros((n_shards, n_shards), np.int64)
+        np.add.at(load2, (src2, dst2), 1)
+        cap3 = int(np.ceil(max(load2.max(), 1) * slack)) + 64
+        # deduped pairs per dedup shard (exact scored_cap)
+        keep = lo != hi
+        uniq = np.unique(
+            (lo[keep].astype(np.int64) << 32) | hi[keep].astype(np.int64)
+        )
+        ulo = (uniq >> 32).astype(np.int32)
+        uhi = (uniq & 0xFFFFFFFF).astype(np.int32)
+        ded_dst = _pair_hash_np(ulo, uhi) % n_shards
+        scored_need = int(np.bincount(ded_dst, minlength=n_shards).max()) \
+            if uniq.size else 1
+        if score_mode == "shuffle":
+            # per-owner loads of the code-gather hops: dedup shard ->
+            # owner(left) -> owner(right); pairs come to rest on
+            # owner(right), so scored_cap must hold that skew too
+            own_lo = ulo // local_n
+            own_hi = uhi // local_n
+            h1 = np.zeros((n_shards, n_shards), np.int64)
+            np.add.at(h1, (ded_dst, own_lo), 1)
+            h2 = np.zeros((n_shards, n_shards), np.int64)
+            np.add.at(h2, (own_lo, own_hi), 1)
+            owner_cap = int(np.ceil(max(h1.max(), h2.max(), 1) * slack)) + 64
+            if uniq.size:
+                scored_need = max(
+                    scored_need,
+                    int(np.bincount(own_hi, minlength=n_shards).max()),
+                )
+        cap4 = int(np.ceil(max(scored_need, 1) * slack)) + 64
+    else:
+        # uniform-hash bound with extra slack (skew caught by overflow+retry)
+        cap3 = int(
+            np.ceil(max(total_pairs / (n_shards * n_shards), 1) * slack * 2)
+        ) + 64
+        cap4 = int(np.ceil(max(total_pairs / n_shards, 1) * slack * 2)) + 64
     return DistributedPlan(
         n_shards=n_shards, local_n=local_n, shingle_route_cap=cap1,
         local_pair_cap=cap2, pair_route_cap=cap3, scored_cap=cap4,
+        owner_route_cap=owner_cap,
     )
 
 
@@ -148,53 +238,64 @@ def make_sharded_pipeline(
     key_fn: Callable | None,
     axis_name: str = "ex",
     score_mode: str = "replicate",
+    lcs_impl: str = "wavefront",
 ):
-    """Build the jitted shard_map join+score pipeline.
+    """Build the jitted shard_map encode+join+score pipeline.
 
     key_fn: jax-traceable ``(local_type_codes [n, L], local_lengths [n]) ->
-      keys [n, S]`` run per shard (a backend's ``shard_key_fn``), or None,
-      in which case the first input of the returned fn carries precomputed
-      keys instead of places.
+      keys [n, S]`` run per shard (a backend's ``shard_key_fn``) on the
+      shard's in-mesh encoded codes, or None, in which case the first input
+      of the returned fn carries precomputed keys instead of places.
 
     Call signature of the returned fn:
-      fn(places_or_keys, lengths [N] int32, codes [N, H, L] int32)
+      fn(first, places [N, L] int32, lengths [N] int32,
+         tables [n_levels, num_places] int32)
         -> dict of per-shard stacked outputs:
            left/right [n, scored_cap], level_lcs [n, scored_cap, H],
            mss [n, scored_cap], overflow [n, 3]
 
-      places_or_keys: with a key_fn, [N, L] places (unused — keys come from
-      the codes; kept for signature compatibility); without, [N, S] keys.
+      first: with a key_fn, unused (pass places again); without, [N, S]
+      keys precomputed host-side and shuffled in (the "udf" driver wall).
+
+    Encoding runs INSIDE the shard_map program: each shard gathers its own
+    rows through the replicated forest ``tables`` (small — the semantic
+    forest, [n_levels, num_places]), so the [N, n_levels, L] code table
+    never materializes on the host, for either score mode.
 
     score_mode:
-      "replicate" — the encoded table is replicated; each shard scores its
-        deduped pairs locally (fine to ~10M trajectories: the table is
+      "replicate" — each shard all_gathers the per-shard encodings into a
+        device-resident replica of the table and scores its deduped pairs
+        locally (fine to ~10M trajectories: the table is
         N * levels * L * 4 bytes).
       "shuffle"   — the table stays sharded; two extra all_to_all rounds
         route each pair to owner(left) then owner(right), attaching the
         owner's code rows on the way (a Spark broadcast-join vs shuffle-join
         switch).  Per-device memory is then O(N/shards) — the 1000-node
         regime.
+
+    lcs_impl selects the scoring implementation exactly as on the
+    single-device path: "wavefront" / "ref" / "kernel" (auto Pallas) /
+    "pallas" (forced Pallas) / "pallas-interpret".
     """
     from jax.sharding import PartitionSpec as P
 
-    n_shards = plan.n_shards
+    from repro.api.stages import lcs_impl_fn
 
-    def shard_fn(first, lengths, codes):
-        # first: LOCAL places (key_fn mode, unused) or LOCAL keys rows;
-        # lengths: LOCAL rows; codes: replicated ("replicate" mode) or
-        # LOCAL rows ("shuffle" mode).
+    n_shards = plan.n_shards
+    impl = lcs_impl_fn(lcs_impl)
+
+    def shard_fn(first, places, lengths, tables):
+        # first: LOCAL keys rows (key_fn=None mode) or unused; places,
+        # lengths: LOCAL rows; tables: the replicated semantic forest.
         me = jax.lax.axis_index(axis_name).astype(jnp.int32)
         gid0 = me * plan.local_n
 
-        # phase (i)+(ii)a: join keys of OUR rows.
+        # phase (i): in-mesh encoding of OUR rows
+        codes = encode_codes(places, tables)  # [local_n, H, L]
+
+        # phase (ii)a: join keys of OUR rows
         if key_fn is not None:
-            if score_mode == "replicate":
-                local_types = jax.lax.dynamic_slice_in_dim(
-                    codes[:, 0, :], gid0, plan.local_n, axis=0
-                )
-            else:
-                local_types = codes[:, 0, :]
-            keys = key_fn(local_types, lengths)  # [local_n, S]
+            keys = key_fn(codes[:, 0, :], lengths)  # [local_n, S]
         else:
             keys = first  # [local_n, S] precomputed host-side
 
@@ -220,19 +321,31 @@ def make_sharded_pipeline(
             n_shards=n_shards, capacity=plan.pair_route_cap,
             pads=(PAD_ID, PAD_ID), axis_name=axis_name,
         )
-        cand = dedup_pairs(rlo[: plan.scored_cap * n_shards],
-                           rhi[: plan.scored_cap * n_shards])
-        left = cand.left[: plan.scored_cap]
-        right = cand.right[: plan.scored_cap]
+        # dedup over the FULL received buffer (valid rows sit scattered in
+        # per-source buckets; dedup's sort compacts them to the front), then
+        # fit to scored_cap with the excess surfaced as overflow
+        cand = dedup_pairs(rlo, rhi)
+
+        def fit_pairs(x):
+            m = x.shape[0]
+            if m >= plan.scored_cap:
+                return x[: plan.scored_cap]
+            return jnp.pad(x, (0, plan.scored_cap - m),
+                           constant_values=PAD_ID)
+
+        left = fit_pairs(cand.left)
+        right = fit_pairs(cand.right)
         ovf4 = jnp.maximum(cand.count - plan.scored_cap, 0)
 
-        # phase (iii): scoring
+        # phase (iii): scoring, through the selected lcs_impl
         if score_mode == "replicate":
+            # on-device replication of the in-mesh encodings (never on host)
+            codes_all = jax.lax.all_gather(codes, axis_name, axis=0, tiled=True)
             li = jnp.where(left == PAD_ID, 0, left)
             ri = jnp.where(right == PAD_ID, 0, right)
             level_lcs = multi_level_lcs(
-                codes[li], _lengths_of(codes[li]),
-                codes[ri], _lengths_of(codes[ri]),
+                codes_all[li], _lengths_of(codes_all[li]),
+                codes_all[ri], _lengths_of(codes_all[ri]), impl=impl,
             )
             ovf5 = jnp.zeros((), jnp.int32)
         else:
@@ -240,7 +353,8 @@ def make_sharded_pipeline(
                 left, right, codes, gid0, plan, n_shards, axis_name
             )
             level_lcs = multi_level_lcs(
-                codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r)
+                codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r),
+                impl=impl,
             )
         mss = mss_scores(level_lcs, betas)
         mss = jnp.where(left == PAD_ID, -1.0, mss)
@@ -255,13 +369,16 @@ def make_sharded_pipeline(
         """Shuffle-mode scoring: route pairs to owner(left), attach that
         shard's code rows, then to owner(right), attach, return to a
         balanced layout (pairs stay wherever owner(right) is — dedup already
-        guaranteed global uniqueness)."""
+        guaranteed global uniqueness).  Hop buckets are sized from the
+        exactly-planned per-owner loads (plan.owner_route_cap); without a
+        plan the uniform fallback applies and overflow counters catch skew.
+        """
         H, L = codes_local.shape[1], codes_local.shape[2]
-        cap = plan.scored_cap  # per-destination capacity per hop
+        cap = plan.owner_route_cap or (plan.scored_cap // n + 64)
         # hop 1: to owner(left)
         (l1, r1), o1 = _route(
             (left, right), left // plan.local_n, left != PAD_ID,
-            n_shards=n, capacity=cap // n + 64, pads=(PAD_ID, PAD_ID),
+            n_shards=n, capacity=cap, pads=(PAD_ID, PAD_ID),
             axis_name=axis,
         )
         safe = jnp.where(l1 == PAD_ID, 0, l1 - gid0)
@@ -271,12 +388,21 @@ def make_sharded_pipeline(
         # hop 2: to owner(right), payload = left codes
         (l2, r2, cl2), o2 = _route(
             (l1, r1, cl), r1 // plan.local_n, l1 != PAD_ID,
-            n_shards=n, capacity=cap // n + 64,
+            n_shards=n, capacity=cap,
             pads=(PAD_ID, PAD_ID, 0), axis_name=axis,
         )
         safe_r = jnp.where(r2 == PAD_ID, 0, r2 - gid0)
         cr = codes_local[jnp.clip(safe_r, 0, plan.local_n - 1)]
         cl_rows = cl2.reshape(l2.shape[0], H, L)
+        # compact valid rows to the front: received rows sit scattered
+        # across per-source buckets, so a plain truncation to scored_cap
+        # could drop valid pairs while keeping padding
+        order = jnp.argsort(l2 == PAD_ID, stable=True)
+        l2, r2 = l2[order], r2[order]
+        cl_rows, cr = cl_rows[order], cr[order]
+        n_valid = jnp.sum(l2 != PAD_ID).astype(jnp.int32)
+        ovf_fit = jnp.maximum(n_valid - plan.scored_cap, 0)
+
         # pad/truncate to scored_cap for a stable output shape
         def fit(x, pad_val):
             m = x.shape[0]
@@ -286,11 +412,10 @@ def make_sharded_pipeline(
             return jnp.pad(x, padw, constant_values=pad_val)
 
         return (fit(l2, PAD_ID), fit(r2, PAD_ID), fit(cl_rows, 0),
-                fit(cr, 0), o1 + o2)
+                fit(cr, 0), o1 + o2 + ovf_fit)
 
     spec_in = (
-        P(axis_name, None), P(axis_name),
-        P() if score_mode == "replicate" else P(axis_name, None, None),
+        P(axis_name, None), P(axis_name, None), P(axis_name), P(None, None),
     )
     spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name), P(axis_name))
     fn = compat.shard_map(
@@ -298,8 +423,8 @@ def make_sharded_pipeline(
     )
 
     @jax.jit
-    def run(first, lengths, codes):
-        left, right, level_lcs, mss, overflow = fn(first, lengths, codes)
+    def run(first, places, lengths, tables):
+        left, right, level_lcs, mss, overflow = fn(first, places, lengths, tables)
         return {
             "left": left.reshape(n_shards, -1),
             "right": right.reshape(n_shards, -1),
@@ -315,17 +440,21 @@ def make_distributed_anotherme(
     mesh: jax.sharding.Mesh,
     plan: DistributedPlan,
     *,
+    tables: jnp.ndarray,
     k: int,
     num_types: int,
     betas: jnp.ndarray,
     axis_name: str = "ex",
     dedup: bool = True,
     score_mode: str = "replicate",
+    lcs_impl: str = "wavefront",
 ):
     """Legacy entry point: the SSH-shingle sharded pipeline.
 
     Thin adapter over :func:`make_sharded_pipeline` with the shingle key_fn;
-    prefer ``AnotherMeEngine`` with ``ExecutionPlan(n_shards=...)``.
+    prefer ``AnotherMeEngine`` with ``ExecutionPlan(n_shards=...)``.  The
+    forest ``tables`` are required because encoding runs in-mesh; the
+    returned fn takes ``(places [N, L], lengths [N])``.
     """
 
     def key_fn(local_types, local_lengths):
@@ -333,10 +462,16 @@ def make_distributed_anotherme(
             local_types, local_lengths, k=k, num_types=num_types, dedup=dedup
         )
 
-    return make_sharded_pipeline(
+    inner = make_sharded_pipeline(
         mesh, plan, betas=betas, key_fn=key_fn,
-        axis_name=axis_name, score_mode=score_mode,
+        axis_name=axis_name, score_mode=score_mode, lcs_impl=lcs_impl,
     )
+    tables = jnp.asarray(tables)
+
+    def run(places, lengths):
+        return inner(places, places, lengths, tables)
+
+    return run
 
 
 def gather_similar_pairs(out: dict, rho: float) -> set[tuple[int, int]]:

@@ -28,7 +28,13 @@ from repro.core.types import (
     CandidatePairs, EncodedBatch, PAD_ID, ScoredPairs, TrajectoryBatch,
 )
 
-LCS_IMPLS = ("wavefront", "ref", "kernel")
+LCS_IMPLS = ("wavefront", "ref", "kernel", "pallas", "pallas-interpret")
+
+# kernel-family impls map to a dispatch mode of kernels/lcs/ops.py:
+#   "kernel"           auto (wavefront for tiny batches off-TPU)
+#   "pallas"           forced Pallas dispatch (interpret off-TPU)
+#   "pallas-interpret" forced Pallas dispatch, interpreter everywhere
+_KERNEL_MODES = {"kernel": "auto", "pallas": "pallas", "pallas-interpret": "interpret"}
 
 
 def validate_lcs_impl(name: str) -> str:
@@ -37,6 +43,23 @@ def validate_lcs_impl(name: str) -> str:
             f"unknown lcs_impl {name!r}; valid implementations: {list(LCS_IMPLS)}"
         )
     return name
+
+
+def lcs_impl_fn(name: str):
+    """jax-traceable batched LCS ``(a [B,L], b [B,L]) -> [B]`` for an impl name.
+
+    Shared by the single-device score stage and the sharded shard_map score
+    stage, so ``lcs_impl`` selects the same implementation on both paths.
+    """
+    validate_lcs_impl(name)
+    if name in _KERNEL_MODES:
+        from repro.kernels.lcs import ops as lcs_ops
+
+        mode = _KERNEL_MODES[name]
+        return lambda a, b: lcs_ops.lcs(a, b, mode=mode)
+    from repro.core.similarity import lcs_ref, lcs_wavefront
+
+    return lcs_ref if name == "ref" else lcs_wavefront
 
 
 @dataclasses.dataclass
@@ -128,8 +151,10 @@ class ScoreStage:
         cfg, cand = ctx.config, ctx.candidates
         impl = validate_lcs_impl(cfg.lcs_impl)
         with ctx.instr.phase("score"):
-            if impl == "kernel":
-                level_lcs, mss = _score_with_kernel(ctx.encoded, cand, ctx.betas)
+            if impl in _KERNEL_MODES:
+                level_lcs, mss = _score_with_kernel(
+                    ctx.encoded, cand, ctx.betas, mode=_KERNEL_MODES[impl]
+                )
             else:
                 level_lcs, mss = score_pairs(
                     ctx.encoded.codes, ctx.encoded.lengths,
@@ -184,7 +209,7 @@ class CommunitiesStage:
         ctx.instr.record(num_communities=len(ctx.communities))
 
 
-def _score_with_kernel(encoded, cand, betas):
+def _score_with_kernel(encoded, cand, betas, *, mode="auto"):
     """Score candidates with the Pallas LCS kernel (kernels/lcs)."""
     from repro.kernels.lcs import ops as lcs_ops
 
@@ -194,5 +219,5 @@ def _score_with_kernel(encoded, cand, betas):
     H, L = encoded.codes.shape[1], encoded.codes.shape[2]
     a = repad(encoded.codes[li], encoded.lengths[li], PAD_CODE_A).reshape(P * H, L)
     b = repad(encoded.codes[ri], encoded.lengths[ri], PAD_CODE_B).reshape(P * H, L)
-    level_lcs = lcs_ops.lcs(a, b).reshape(P, H)
+    level_lcs = lcs_ops.lcs(a, b, mode=mode).reshape(P, H)
     return level_lcs, mss_scores(level_lcs, betas)

@@ -14,7 +14,8 @@ from repro.core.types import (
     PAD_PLACE, PAD_KEY, PAD_ID,
 )
 from repro.core.encoding import (
-    SemanticForest, make_random_forest, forest_tables, encode_batch, type_codes,
+    SemanticForest, make_random_forest, forest_tables, encode_batch,
+    encode_codes, encode_types, type_codes,
 )
 from repro.core.shingling import (
     shingles_from_types, shingle_indices, num_shingles, expected_collision_rate,

@@ -106,6 +106,43 @@ def forest_tables(forest: SemanticForest) -> jnp.ndarray:
     return jnp.asarray(np.stack(forest.level_maps(), axis=0))
 
 
+def encode_codes(
+    places: jnp.ndarray,
+    tables: jnp.ndarray,
+    *,
+    pad_code: int = PAD_CODE_A,
+) -> jnp.ndarray:
+    """Raw-array encoding: place ids [N, L] -> codes [N, n_levels, L].
+
+    jit-friendly (a single gather per level, one fused gather in XLA) and
+    jax-traceable on raw arrays, so the sharded pipeline can run it *inside*
+    the shard_map program on each shard's local rows — the full code table
+    then never materializes replicated on the host.
+    """
+    safe = jnp.where(places == PAD_PLACE, 0, places)
+    # tables: [n_levels, P]; gather -> [n_levels, N, L] -> [N, n_levels, L]
+    codes = tables[:, safe]
+    codes = jnp.transpose(codes, (1, 0, 2)).astype(jnp.int32)
+    return jnp.where((places == PAD_PLACE)[:, None, :], pad_code, codes)
+
+
+def encode_types(
+    places: jnp.ndarray,
+    tables: jnp.ndarray,
+    *,
+    pad_code: int = PAD_CODE_A,
+) -> jnp.ndarray:
+    """Coarsest-level ("type") codes only: place ids [N, L] -> int32 [N, L].
+
+    The driver-side view the sharded engine uses for capacity planning: join
+    keys derive from level 0, so planning needs one [N, L] gather — not the
+    [N, n_levels, L] code table, which stays device-resident.
+    """
+    safe = jnp.where(places == PAD_PLACE, 0, places)
+    types = tables[0, safe].astype(jnp.int32)
+    return jnp.where(places == PAD_PLACE, pad_code, types)
+
+
 def encode_batch(
     batch: TrajectoryBatch,
     tables: jnp.ndarray,
@@ -114,15 +151,9 @@ def encode_batch(
 ) -> EncodedBatch:
     """Map each place id through every forest level: [N, L] -> [N, n_levels, L].
 
-    jit-friendly: a single gather per level (one fused gather in XLA).
     Padded positions become ``pad_code``.
     """
-    places = batch.places
-    safe = jnp.where(places == PAD_PLACE, 0, places)
-    # tables: [n_levels, P]; gather -> [n_levels, N, L] -> [N, n_levels, L]
-    codes = tables[:, safe]
-    codes = jnp.transpose(codes, (1, 0, 2)).astype(jnp.int32)
-    codes = jnp.where((places == PAD_PLACE)[:, None, :], pad_code, codes)
+    codes = encode_codes(batch.places, tables, pad_code=pad_code)
     return EncodedBatch(codes=codes, lengths=batch.lengths)
 
 

@@ -1,9 +1,21 @@
 """Public jit'd wrapper for the batched LCS kernel.
 
-Pads the batch to the block size, dispatches to the Pallas kernel
-(interpret=True off-TPU so CPU tests execute the same kernel body), and
-falls back to the jnp wavefront for tiny batches where kernel launch
-overhead dominates.
+Pads the batch to the block size and dispatches to the Pallas kernel
+(interpret=True off-TPU so CPU tests execute the same kernel body).  The
+wrapper is shard-local-shape aware: it is traceable inside a shard_map
+program, where the batch is the per-shard pair buffer — the block size
+shrinks to the (power-of-two) batch size so a small shard never pads up to
+a full 512-row tile, and any remainder rows are sentinel-padded so they
+can never contribute a match.
+
+``mode`` selects the dispatch policy:
+
+  "auto"       wavefront for tiny batches off-TPU (kernel launch overhead
+               dominates), Pallas otherwise — the production default.
+  "pallas"     always the Pallas kernel (interpret off-TPU); used by parity
+               tests that must prove the kernel really runs.
+  "interpret"  always the Pallas kernel with interpret=True, even on TPU.
+  "wavefront"  always the jnp anti-diagonal wavefront.
 """
 from __future__ import annotations
 
@@ -20,19 +32,40 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_b",))
-def lcs(a: jnp.ndarray, b: jnp.ndarray, *, block_b: int = 512) -> jnp.ndarray:
+def _block_for(batch: int, block_b: int) -> int:
+    """Largest power-of-two block <= block_b that does not over-pad batch."""
+    b = 1
+    while b < batch and b < block_b:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "mode"))
+def lcs(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_b: int = 512,
+    mode: str = "auto",
+) -> jnp.ndarray:
     """Batched LCS: int32 [B, L] x2 -> int32 [B].
 
     Inputs must be sentinel-padded (side A: -1, side B: -2) as produced by
     repro.core.similarity.repad.
     """
+    if mode not in ("auto", "pallas", "interpret", "wavefront"):
+        raise ValueError(
+            f"unknown lcs dispatch mode {mode!r}; "
+            "valid: ['auto', 'pallas', 'interpret', 'wavefront']"
+        )
     B, L = a.shape
-    if B < block_b and not _on_tpu():
+    if mode == "wavefront" or (mode == "auto" and B < block_b and not _on_tpu()):
         return lcs_wavefront(a, b)
-    pad = (-B) % block_b
+    interpret = True if mode == "interpret" else not _on_tpu()
+    bb = _block_for(B, block_b)
+    pad = (-B) % bb
     if pad:
         a = jnp.concatenate([a, jnp.full((pad, L), -1, jnp.int32)])
         b = jnp.concatenate([b, jnp.full((pad, L), -2, jnp.int32)])
-    out = lcs_pallas(a, b, block_b=block_b, interpret=not _on_tpu())
+    out = lcs_pallas(a, b, block_b=bb, interpret=interpret)
     return out[:B]

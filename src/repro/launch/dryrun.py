@@ -336,11 +336,12 @@ def lower_anotherme(multi_pod: bool, n_traj: int = 1_048_576, L: int = 16):
     lengths = jax.ShapeDtypeStruct(
         (n_shards * local_n,), jnp.int32, sharding=NamedSharding(mesh, P("ex")),
     )
-    codes = jax.ShapeDtypeStruct(
-        (n_shards * local_n, 3, L), jnp.int32,
-        sharding=NamedSharding(mesh, P()),
+    # the semantic forest (replicated; encoding runs in-mesh from it —
+    # the [N, 3, L] code table never exists as a program input)
+    tables = jax.ShapeDtypeStruct(
+        (3, 10_000), jnp.int32, sharding=NamedSharding(mesh, P()),
     )
-    lowered = jax.jit(run).lower(places, lengths, codes)
+    lowered = jax.jit(run).lower(places, places, lengths, tables)
     t0 = time.time()
     compiled = lowered.compile()
     print(compiled.memory_analysis())

@@ -151,17 +151,20 @@ def probe_anotherme(cfg_over):
         shingle_route_cap=int(local_n * 560 / n_shards * 1.3) + 64,
         local_pair_cap=1 << 18, pair_route_cap=1 << 12, scored_cap=1 << 18,
     )
+    # real forest tables (paper scale: 300 types, 10k places): the adapter
+    # closes over them and encoding runs in-mesh — no code-table input
+    from repro.core.encoding import forest_tables, make_random_forest
+
+    tables = forest_tables(make_random_forest(300, 10, 10_000))
     run = make_distributed_anotherme(
-        mesh, plan, k=3, num_types=300, betas=default_betas(3),
+        mesh, plan, tables=tables, k=3, num_types=300, betas=default_betas(3),
         dedup=cfg_over.get("dedup", True),
     )
     places = jax.ShapeDtypeStruct((n_traj, L), jnp.int32,
                                   sharding=NamedSharding(mesh, P("ex", None)))
     lengths = jax.ShapeDtypeStruct((n_traj,), jnp.int32,
                                    sharding=NamedSharding(mesh, P("ex")))
-    codes = jax.ShapeDtypeStruct((n_traj, 3, L), jnp.int32,
-                                 sharding=NamedSharding(mesh, P()))
-    compiled = jax.jit(run).lower(places, lengths, codes).compile()
+    compiled = jax.jit(run).lower(places, lengths).compile()
     ca = compiled.cost_analysis()
     coll = H.collective_bytes(compiled.as_text())
     mem = H.memory_summary(compiled)

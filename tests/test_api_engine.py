@@ -165,7 +165,7 @@ assert (0, 1) in ssh.similar_pairs
 
 # a denser world: ssh + minhash, sharded == single == legacy shard_map
 import numpy as np, jax.numpy as jnp
-from repro.core import compat, default_betas, encode_batch, forest_tables
+from repro.core import compat, default_betas, encode_types, forest_tables
 from repro.core.distributed import (
     gather_similar_pairs, make_distributed_anotherme, pad_to_shards,
     plan_capacities)
@@ -185,14 +185,15 @@ places, lengths = pad_to_shards(
     np.asarray(batch.places), np.asarray(batch.lengths), 8)
 bp = TrajectoryBatch(jnp.asarray(places), jnp.asarray(lengths),
                      jnp.arange(places.shape[0]))
-enc = encode_batch(bp, forest_tables(forest))
+tables = forest_tables(forest)
 keys_np = np.asarray(shingles_from_types(
-    enc.codes[:, 0, :], bp.lengths, k=3, num_types=forest.num_types))
+    encode_types(bp.places, tables), bp.lengths, k=3,
+    num_types=forest.num_types))
 mesh = compat.make_mesh((8,), ("ex",))
 legacy = make_distributed_anotherme(
-    mesh, plan_capacities(keys_np, 8), k=3, num_types=forest.num_types,
-    betas=default_betas(3))
-out = legacy(bp.places, bp.lengths, enc.codes)
+    mesh, plan_capacities(keys_np, 8), tables=tables, k=3,
+    num_types=forest.num_types, betas=default_betas(3))
+out = legacy(bp.places, bp.lengths)
 ssh_single = AnotherMeEngine(forest, EngineConfig()).run(batch)
 assert gather_similar_pairs(out, rho=2.0) == ssh_single.similar_pairs
 print("OK")

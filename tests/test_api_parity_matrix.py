@@ -1,0 +1,155 @@
+"""Cross-backend parity matrix for the device-resident sharded pipeline.
+
+Pins the contract of ISSUE 2: every cell of
+
+    {ssh, minhash, brp, udf} x {1, 2, 4 shards} x {replicate, shuffle}
+                             x {wavefront, pallas-interpret}
+
+produces identical similar pairs, identical communities and bit-identical
+per-pair scores to the single-device engine (and, at n_shards=1, to the
+legacy ``run_anotherme``).  Sharded cells run in a subprocess (device count
+binds at jax init); one subprocess per backend keeps the matrix affordable
+while still compiling every (shards, mode, impl) program.
+
+Also proves the two structural claims:
+* with n_shards>1 the engine has NO host EncodeStage (encoding runs inside
+  the shard_map program) and reports no ``t_encode`` phase;
+* ``lcs_impl="pallas-interpret"`` really dispatches ``lcs_pallas`` inside
+  the shard_map score stage (counted via monkeypatch at trace time).
+"""
+import pytest
+
+from conftest import run_subprocess
+
+BACKENDS = ("ssh", "minhash", "brp", "udf")
+
+MATRIX_CODE = r"""
+import numpy as np
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.core import AnotherMeConfig, run_anotherme
+from repro.core.types import PAD_ID
+from repro.data import fig1_world
+
+backend = "%(backend)s"
+batch, forest = fig1_world()
+RHO = 3.0
+IMPLS = ("wavefront", "pallas-interpret")
+
+
+def score_map(res):
+    left = np.asarray(res.scored.left)
+    right = np.asarray(res.scored.right)
+    mss = np.asarray(res.scored.mss)
+    lvl = np.asarray(res.scored.level_lcs)
+    keep = left != PAD_ID
+    return {
+        (int(a), int(b)): (float(m), tuple(int(x) for x in lv))
+        for a, b, m, lv in zip(left[keep], right[keep], mss[keep], lvl[keep])
+    }
+
+
+base = {}
+for impl in IMPLS:
+    cfg = EngineConfig(backend=backend, rho=RHO, lcs_impl=impl)
+    base[impl] = AnotherMeEngine(forest, cfg).run(batch)
+
+# engine vs engine across impls: integer LCS => bit-identical scores
+assert score_map(base["wavefront"]) == score_map(base["pallas-interpret"])
+
+# engine vs legacy (single device, ssh/udf share the lossless shingle join)
+if backend in ("ssh", "udf"):
+    legacy = run_anotherme(batch, forest, AnotherMeConfig(rho=RHO))
+    assert base["wavefront"].similar_pairs == legacy.similar_pairs
+    assert base["wavefront"].communities == legacy.communities
+
+for impl in IMPLS:
+    cfg = EngineConfig(backend=backend, rho=RHO, lcs_impl=impl)
+    want_pairs = base[impl].similar_pairs
+    want_comms = base[impl].communities
+    want_scores = score_map(base[impl])
+    for n_shards in (1, 2, 4):
+        modes = ("replicate", "shuffle") if n_shards > 1 else ("replicate",)
+        for mode in modes:
+            res = AnotherMeEngine(
+                forest, cfg,
+                ExecutionPlan(n_shards=n_shards, score_mode=mode),
+            ).run(batch)
+            cell = (backend, n_shards, mode, impl)
+            assert res.similar_pairs == want_pairs, cell
+            assert res.communities == want_comms, cell
+            assert score_map(res) == want_scores, cell
+print("OK", backend)
+"""
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_matrix(backend):
+    out = run_subprocess(MATRIX_CODE % {"backend": backend}, devices=4)
+    assert f"OK {backend}" in out
+
+
+PALLAS_DISPATCH_CODE = r"""
+import numpy as np
+import repro.kernels.lcs.ops as lcs_ops
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.data import fig1_world
+
+calls = []
+real = lcs_ops.lcs_pallas
+
+def counting(*args, **kwargs):
+    calls.append(kwargs.get("interpret"))
+    return real(*args, **kwargs)
+
+lcs_ops.lcs_pallas = counting
+batch, forest = fig1_world()
+cfg = EngineConfig(rho=3.0)
+single = AnotherMeEngine(forest, cfg).run(batch)
+assert not calls  # default wavefront impl never touches the kernel
+
+sharded = AnotherMeEngine(
+    forest, cfg, ExecutionPlan(n_shards=4, lcs_impl="pallas-interpret"),
+).run(batch)
+# traced (and therefore executed) inside the shard_map score stage
+assert calls and all(interp is True for interp in calls), calls
+assert sharded.similar_pairs == single.similar_pairs
+assert sharded.communities == single.communities
+print("OK", len(calls))
+"""
+
+
+def test_sharded_pallas_dispatch_is_real():
+    """ExecutionPlan(lcs_impl=...) must route the Pallas kernel into the
+    shard_map score stage — not silently fall back to the wavefront."""
+    out = run_subprocess(PALLAS_DISPATCH_CODE, devices=4)
+    assert "OK" in out
+
+
+def test_sharded_engine_has_no_host_encode_stage():
+    """n_shards>1 folds Encode into the fused shard_map stage: no host
+    EncodeStage, so the code table never materializes replicated."""
+    from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+    from repro.data import fig1_world
+
+    _, forest = fig1_world()
+    eng = AnotherMeEngine(forest, EngineConfig(), ExecutionPlan(n_shards=4))
+    names = [s.name for s in eng._stages]
+    assert "encode" not in names
+    assert names[0] == "sharded_encode_join_score"
+
+
+def test_plan_lcs_impl_override_folds_into_config():
+    from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+    from repro.data import fig1_world
+
+    _, forest = fig1_world()
+    eng = AnotherMeEngine(
+        forest, EngineConfig(lcs_impl="wavefront"),
+        ExecutionPlan(lcs_impl="pallas"),
+    )
+    assert eng.config.lcs_impl == "pallas"
+    import pytest as _pytest
+
+    with _pytest.raises(ValueError, match="lcs_impl"):
+        AnotherMeEngine(forest, EngineConfig(),
+                        ExecutionPlan(lcs_impl="no-such-impl"))

@@ -11,7 +11,7 @@ from repro.core import *
 from repro.core.distributed import (
     make_distributed_anotherme, plan_capacities, gather_similar_pairs,
     pad_to_shards)
-from repro.core.encoding import encode_batch, forest_tables
+from repro.core.encoding import encode_types, forest_tables
 from repro.core.shingling import shingles_from_types
 from repro.core.types import TrajectoryBatch
 from repro.data import synthetic_setup
@@ -25,15 +25,16 @@ places, lengths = pad_to_shards(
     np.asarray(batch.places), np.asarray(batch.lengths), n_shards)
 bp = TrajectoryBatch(jnp.asarray(places), jnp.asarray(lengths),
                      jnp.arange(places.shape[0]))
-enc = encode_batch(bp, tables)
 keys_np = np.asarray(shingles_from_types(
-    enc.codes[:, 0, :], bp.lengths, k=3, num_types=forest.num_types))
+    encode_types(bp.places, tables), bp.lengths, k=3,
+    num_types=forest.num_types))
 plan = plan_capacities(keys_np, n_shards)
 from repro.core import compat
 mesh = compat.make_mesh((n_shards,), ("ex",))
 run = make_distributed_anotherme(
-    mesh, plan, k=3, num_types=forest.num_types, betas=default_betas(3))
-out = run(bp.places, bp.lengths, enc.codes)
+    mesh, plan, tables=tables, k=3, num_types=forest.num_types,
+    betas=default_betas(3))
+out = run(bp.places, bp.lengths)
 assert int(np.asarray(out["overflow"]).sum()) == 0, "capacity overflow"
 dist_pairs = gather_similar_pairs(out, rho=2.0)
 res = run_anotherme(batch, forest, AnotherMeConfig())
@@ -49,8 +50,11 @@ def test_distributed_matches_single_device():
 
 
 CODE_SHUFFLE = CODE.replace(
-    'make_distributed_anotherme(\n    mesh, plan, k=3, num_types=forest.num_types, betas=default_betas(3))',
-    'make_distributed_anotherme(\n    mesh, plan, k=3, num_types=forest.num_types, betas=default_betas(3),\n    score_mode="shuffle")',
+    'make_distributed_anotherme(\n    mesh, plan, tables=tables, k=3, num_types=forest.num_types,\n    betas=default_betas(3))',
+    'make_distributed_anotherme(\n    mesh, plan, tables=tables, k=3, num_types=forest.num_types,\n    betas=default_betas(3), score_mode="shuffle")',
+).replace(
+    'plan = plan_capacities(keys_np, n_shards)',
+    'plan = plan_capacities(keys_np, n_shards, score_mode="shuffle")',
 )
 
 

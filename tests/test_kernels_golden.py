@@ -1,0 +1,159 @@
+"""Golden tests: Pallas interpret mode vs ref.py on odd shapes.
+
+The allclose sweeps in test_kernels.py cover friendly shapes; these pin the
+edge geometry the sharded pipeline actually produces — length-1 sequences,
+batches that are not a multiple of the block size (shard-local pair buffers
+are capacity-planned, not tile-aligned), and degenerate all-identical
+inputs — for the three trajectory kernels {lcs, minhash, shingle}.
+
+The LCS cases force ``mode="interpret"`` so the kernel body really executes
+(the "auto" dispatch would route tiny batches to the wavefront).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import PAD_KEY
+
+
+def _sentinel_pad(a, b, la, lb):
+    L = a.shape[1]
+    a = a.copy()
+    b = b.copy()
+    a[np.arange(L)[None, :] >= la[:, None]] = -1
+    b[np.arange(L)[None, :] >= lb[:, None]] = -2
+    return a, b
+
+
+class TestLCSGolden:
+    def _check(self, a, b, block_b=64):
+        from repro.kernels.lcs.ops import lcs
+        from repro.kernels.lcs.ref import lcs as ref
+
+        got = np.asarray(
+            lcs(jnp.asarray(a), jnp.asarray(b), block_b=block_b,
+                mode="interpret")
+        )
+        want = np.asarray(ref(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("B", [1, 3, 257])
+    def test_length_one_sequences(self, B):
+        rng = np.random.default_rng(B)
+        L = 8
+        a = rng.integers(0, 5, size=(B, L)).astype(np.int32)
+        b = rng.integers(0, 5, size=(B, L)).astype(np.int32)
+        a, b = _sentinel_pad(a, b, np.ones(B, int), np.ones(B, int))
+        self._check(a, b)
+
+    def test_max_len_one(self):
+        # L == 1: the rolling window degenerates to a single lane
+        a = np.asarray([[2], [3], [4]], np.int32)
+        b = np.asarray([[2], [5], [4]], np.int32)
+        self._check(a, b, block_b=2)
+
+    @pytest.mark.parametrize("B", [5, 130, 300])
+    def test_non_multiple_of_block_batches(self, B):
+        rng = np.random.default_rng(B * 3)
+        L = 12
+        la = rng.integers(1, L + 1, size=B)
+        lb = rng.integers(1, L + 1, size=B)
+        a = rng.integers(0, 6, size=(B, L)).astype(np.int32)
+        b = rng.integers(0, 6, size=(B, L)).astype(np.int32)
+        a, b = _sentinel_pad(a, b, la, lb)
+        self._check(a, b, block_b=128)
+
+    def test_all_identical_inputs(self):
+        B, L = 64, 10
+        a = np.full((B, L), 7, np.int32)
+        b = np.full((B, L), 7, np.int32)
+        self._check(a, b)          # LCS == L for every row
+        la = np.arange(B) % L + 1
+        a2, b2 = _sentinel_pad(a, b, la, np.full(B, L, int))
+        self._check(a2, b2)        # LCS == la: prefix vs full repeat
+
+
+class TestMinhashGolden:
+    def _check(self, types, lengths, num_perm=8):
+        from repro.kernels.minhash.ops import minhash_signatures as kern
+        from repro.kernels.minhash.ref import minhash_signatures as ref
+
+        got = np.asarray(kern(jnp.asarray(types), jnp.asarray(lengths),
+                              num_perm=num_perm, block_b=64))
+        want = np.asarray(ref(jnp.asarray(types), jnp.asarray(lengths),
+                              num_perm=num_perm))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("N", [1, 67, 130])
+    def test_non_multiple_of_block_batches(self, N):
+        rng = np.random.default_rng(N)
+        L = 10
+        lengths = rng.integers(1, L + 1, size=N).astype(np.int32)
+        types = rng.integers(0, 30, size=(N, L)).astype(np.int32)
+        self._check(types, lengths)
+
+    def test_length_one_sequences(self):
+        N, L = 33, 12
+        rng = np.random.default_rng(9)
+        types = rng.integers(0, 30, size=(N, L)).astype(np.int32)
+        self._check(types, np.ones(N, np.int32))
+
+    def test_all_identical_inputs(self):
+        N, L = 50, 8
+        types = np.full((N, L), 4, np.int32)
+        lengths = np.full((N,), L, np.int32)
+        self._check(types, lengths)
+        # identical sets => identical signatures across rows
+        from repro.kernels.minhash.ops import minhash_signatures as kern
+
+        sig = np.asarray(kern(jnp.asarray(types), jnp.asarray(lengths),
+                              num_perm=8, block_b=64))
+        assert (sig == sig[0]).all()
+
+
+class TestShingleGolden:
+    def _sets(self, keys):
+        return [set(row[row != PAD_KEY].tolist()) for row in np.asarray(keys)]
+
+    def _check(self, types, lengths, k=3, Q=30):
+        from repro.core.shingling import shingles_from_types
+        from repro.kernels.shingle.ops import shingle_keys
+
+        got = shingle_keys(jnp.asarray(types), jnp.asarray(lengths),
+                           k=k, num_types=Q, block_b=32)
+        want = shingles_from_types(jnp.asarray(types), jnp.asarray(lengths),
+                                   k=k, num_types=Q)
+        assert self._sets(got) == self._sets(want)
+
+    @pytest.mark.parametrize("N", [1, 33, 70])
+    def test_non_multiple_of_block_batches(self, N):
+        rng = np.random.default_rng(N * 7)
+        L = 10
+        lengths = rng.integers(1, L + 1, size=N).astype(np.int32)
+        types = rng.integers(0, 30, size=(N, L)).astype(np.int32)
+        self._check(types, lengths)
+
+    def test_below_shingle_order_yields_empty(self):
+        # length < k: no k-shingle exists; both sides must agree on "empty"
+        N, L = 17, 8
+        rng = np.random.default_rng(3)
+        types = rng.integers(0, 30, size=(N, L)).astype(np.int32)
+        lengths = np.full((N,), 2, np.int32)   # k = 3 below
+        from repro.kernels.shingle.ops import shingle_keys
+
+        got = shingle_keys(jnp.asarray(types), jnp.asarray(lengths),
+                           k=3, num_types=30, block_b=32)
+        assert all(s == set() for s in self._sets(got))
+        self._check(types, lengths)
+
+    def test_all_identical_inputs(self):
+        # one distinct symbol -> exactly one distinct shingle after dedup
+        N, L = 21, 9
+        types = np.full((N, L), 5, np.int32)
+        lengths = np.full((N,), L, np.int32)
+        self._check(types, lengths)
+        from repro.kernels.shingle.ops import shingle_keys
+
+        keys = shingle_keys(jnp.asarray(types), jnp.asarray(lengths),
+                            k=3, num_types=30, block_b=32)
+        assert all(len(s) == 1 for s in self._sets(keys))
