@@ -1,0 +1,288 @@
+"""Score-stage benchmark: pairs/sec for wavefront vs pallas vs fused.
+
+Measures the exact-similarity hot path (``score_pairs`` and its kernels)
+in isolation over a grid of pair counts P, level counts H, sequence
+lengths L, and MSS-prune rates, and writes a machine-readable
+``BENCH_score.json`` so this and every later perf PR leaves a recorded
+trajectory (ISSUE 3).  The tier-1 CI workflow runs ``--smoke`` and uploads
+the JSON as an artifact per PR.
+
+Implementations measured (dispatch recorded per row — on CPU the Pallas
+kernels run under the interpreter and "fused" auto-dispatches to its jnp
+reference, so CPU ratios document the harness, not the TPU win):
+
+  wavefront    gather + repad + jnp anti-diagonal wavefront + mss_scores
+               (the baseline ``score_pairs`` path)
+  pallas       gather + repad + the blocked Pallas LCS kernel
+  fused        the gather-free fused kernel: scalar-prefetch gather from
+               the resident table, level-fused wavefront, in-block MSS
+               (``exact_mss=False``: the pure-throughput epilogue)
+  fused+prune  MSS upper-bound prune (compaction included in the timing)
+               then fused scoring of the survivors only; pairs/sec still
+               counts ALL P pairs — the prune win shows up as throughput
+
+JSON schema (``schema: bench_score/v1``)::
+
+    {
+      "schema": "bench_score/v1",
+      "backend": "cpu" | "tpu" | ...,
+      "jax_version": "...",
+      "smoke": bool,
+      "rows": [
+        {"impl": "fused", "dispatch": "kernel" | "interpret" | "ref"
+                          | "wavefront",
+         "P": int, "H": int, "L": int, "prune_rate": float,
+         "wall_s": float, "pairs_per_sec": float, "repeats": int}, ...
+      ],
+      "ratios": {"fused_vs_wavefront": {"P=4096,H=3,L=32": float, ...},
+                 "pallas_vs_wavefront": {...}}
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_HERE)
+for p in (_REPO, os.path.join(_REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+IMPLS = ("wavefront", "pallas", "fused", "fused+prune")
+
+
+def _make_inputs(P, H, L, *, n_rows=None, seed=0):
+    """A synthetic score-stage workload: resident code table + pair list.
+
+    Lengths are skewed (heavy short head) so prune rates are controllable
+    via a quantile threshold, matching real trajectory length
+    distributions.
+    """
+    rng = np.random.default_rng(seed)
+    N = n_rows or max(256, P // 8)
+    w = 1.0 / np.arange(1, L + 1)
+    lengths = rng.choice(np.arange(1, L + 1), size=N, p=w / w.sum())
+    lengths = lengths.astype(np.int32)
+    codes = rng.integers(0, 30, size=(N, H, L)).astype(np.int32)
+    pad = np.arange(L)[None, None, :] >= lengths[:, None, None]
+    codes = np.where(pad, -1, codes)
+    left = rng.integers(0, N, size=P).astype(np.int32)
+    right = rng.integers(0, N, size=P).astype(np.int32)
+    betas = np.full((H,), 1.0 / H, np.float32)
+    return (jnp.asarray(codes), jnp.asarray(lengths), jnp.asarray(left),
+            jnp.asarray(right), jnp.asarray(betas))
+
+
+def _tau_for_rate(lengths, left, right, betas, prune_rate):
+    """The tau whose upper-bound prune drops ~prune_rate of the pairs."""
+    if prune_rate <= 0.0:
+        return None
+    from repro.core.similarity import mss_upper_bound
+
+    lengths, left, right = map(np.asarray, (lengths, left, right))
+    ub = mss_upper_bound(
+        lengths[left], lengths[right], float(np.asarray(betas).sum())
+    )
+    return float(np.quantile(ub, prune_rate))
+
+
+def _build_call(impl, codes, lengths, left, right, betas, tau):
+    """(callable returning mss, dispatch label) for one measured impl."""
+    from repro.core.similarity import (
+        PRUNE_EPS, mss_scores, mss_upper_bound, repad, score_pairs,
+    )
+    from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
+    from repro.kernels.lcs import ops as lcs_ops
+    from repro.kernels.lcs.fused import fused_score
+
+    on_tpu = jax.default_backend() == "tpu"
+    P = left.shape[0]
+    H, L = codes.shape[1], codes.shape[2]
+
+    if impl == "wavefront":
+        def call():
+            _, mss = score_pairs(codes, lengths, left, right, betas,
+                                 impl_name="wavefront")
+            return mss
+
+        return call, "wavefront"
+
+    if impl == "pallas":
+        @jax.jit
+        def call():
+            a = repad(codes[left], lengths[left], PAD_CODE_A)
+            b = repad(codes[right], lengths[right], PAD_CODE_B)
+            lv = lcs_ops.lcs(a.reshape(P * H, L), b.reshape(P * H, L),
+                             mode="pallas").reshape(P, H)
+            return mss_scores(lv, betas)
+
+        return call, ("kernel" if on_tpu else "interpret")
+
+    if impl == "fused":
+        @jax.jit
+        def call():
+            _, mss = fused_score(codes, lengths, codes, lengths, left, right,
+                                 betas, mode="auto", exact_mss=False)
+            return mss
+
+        return call, ("kernel" if on_tpu else "ref")
+
+    if impl == "fused+prune":
+        t = 0.0 if tau is None else tau
+        bsum = jnp.sum(betas)
+        # host-planned post-prune capacity, as CapacityPlanner sizes it:
+        # exact scoring then runs over the survivor buffer only
+        ub_host = mss_upper_bound(
+            np.asarray(lengths)[np.asarray(left)],
+            np.asarray(lengths)[np.asarray(right)],
+            float(np.asarray(betas).sum()),
+        )
+        cap = max(1, int((ub_host > np.float32(t - PRUNE_EPS)).sum()))
+
+        @jax.jit
+        def call():
+            ub = mss_upper_bound(lengths[left], lengths[right], bsum)
+            keep = ub > t - PRUNE_EPS
+            order = jnp.argsort(jnp.logical_not(keep), stable=True)
+            n_keep = jnp.minimum(jnp.sum(keep), cap)
+            sl, sr = left[order][:cap], right[order][:cap]
+            _, mss = fused_score(codes, lengths, codes, lengths, sl, sr,
+                                 betas, mode="auto", exact_mss=False)
+            return jnp.where(jnp.arange(cap) < n_keep, mss, -1.0)
+
+        return call, ("kernel" if on_tpu else "ref")
+
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _time_call(call, repeats):
+    call().block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = call()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run_grid(grid, *, repeats=3, impls=IMPLS):
+    """Measure every (P, H, L, prune_rate) cell; returns the rows list."""
+    rows = []
+    for P, H, L, prune_rate in grid:
+        codes, lengths, left, right, betas = _make_inputs(P, H, L)
+        tau = _tau_for_rate(lengths, left, right, betas, prune_rate)
+        for impl in impls:
+            if impl == "fused+prune" and prune_rate <= 0.0:
+                continue
+            if impl != "fused+prune" and prune_rate > 0.0:
+                continue  # prune rates only vary the fused+prune rows
+            call, dispatch = _build_call(
+                impl, codes, lengths, left, right, betas, tau
+            )
+            wall = _time_call(call, repeats)
+            rows.append({
+                "impl": impl, "dispatch": dispatch,
+                "P": P, "H": H, "L": L, "prune_rate": prune_rate,
+                "wall_s": wall, "pairs_per_sec": P / wall,
+                "repeats": repeats,
+            })
+    return rows
+
+
+def _ratios(rows):
+    base = {(r["P"], r["H"], r["L"]): r["pairs_per_sec"]
+            for r in rows if r["impl"] == "wavefront"}
+    out = {}
+    for impl in ("pallas", "fused", "fused+prune"):
+        rs = {}
+        for r in rows:
+            if r["impl"] != impl:
+                continue
+            key = (r["P"], r["H"], r["L"])
+            if key not in base:
+                continue
+            tag = f"P={key[0]},H={key[1]},L={key[2]}"
+            if impl == "fused+prune":
+                tag += f",prune={r['prune_rate']}"
+            rs[tag] = round(r["pairs_per_sec"] / base[key], 3)
+        if rs:
+            out[f"{impl.replace('+', '_')}_vs_wavefront"] = rs
+    return out
+
+
+def _grid(smoke, full):
+    if smoke:
+        return [(256, 3, 16, 0.0), (1024, 3, 16, 0.0), (1024, 3, 16, 0.7)]
+    grid = []
+    for P in (1024, 4096) + ((16384,) if full else ()):
+        for L in (16, 32):
+            grid.append((P, 3, L, 0.0))
+            grid.append((P, 3, L, 0.5))
+            grid.append((P, 3, L, 0.9))
+    if full:
+        grid.append((4096, 5, 32, 0.0))
+    return grid
+
+
+def bench(*, smoke=False, full=False, repeats=None, out_path=None):
+    repeats = repeats or (2 if smoke else 5)
+    rows = run_grid(_grid(smoke, full), repeats=repeats)
+    report = {
+        "schema": "bench_score/v1",
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "smoke": bool(smoke),
+        "rows": rows,
+        "ratios": _ratios(rows),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+def run(full: bool = False):
+    """benchmarks/run.py entry point: CSV rows + BENCH_score.json."""
+    from benchmarks.common import Row
+
+    report = bench(smoke=not full, full=full,
+                   out_path=os.path.join(_REPO, "BENCH_score.json"))
+    for r in report["rows"]:
+        name = (f"bench_score/{r['impl']}/P{r['P']}_H{r['H']}_L{r['L']}"
+                f"_prune{r['prune_rate']}")
+        yield Row(name, r["wall_s"] * 1e6,
+                  f"{r['pairs_per_sec']:.0f} pairs/s [{r['dispatch']}]")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grid (adds P=16384, H=5)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_score.json")
+    args = ap.parse_args()
+    report = bench(smoke=args.smoke, full=args.full, repeats=args.repeats,
+                   out_path=args.out)
+    print(f"# backend={report['backend']} jax={report['jax_version']}")
+    for r in report["rows"]:
+        print(f"{r['impl']:12s} P={r['P']:<6d} H={r['H']} L={r['L']:<3d} "
+              f"prune={r['prune_rate']:.1f} [{r['dispatch']:9s}] "
+              f"{r['pairs_per_sec']:>12.0f} pairs/s")
+    for name, rs in report["ratios"].items():
+        for tag, v in rs.items():
+            print(f"# {name} {tag}: {v}x")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

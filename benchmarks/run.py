@@ -10,6 +10,7 @@ import sys
 import traceback
 
 MODULES = [
+    "bench_score",
     "fig7_processing_time",
     "fig8_pairs_compared",
     "fig9_hash_overhead",

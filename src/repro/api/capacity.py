@@ -60,6 +60,9 @@ class CapacityPlanner:
         *,
         slack: float | None = None,
         score_mode: str = "replicate",
+        lengths_np=None,
+        prune_tau: float | None = None,
+        betas_sum: float = 1.0,
     ):
         """Exact per-bucket capacity plan for the sharded (shard_map) path.
 
@@ -68,6 +71,11 @@ class CapacityPlanner:
         (for ``score_mode="shuffle"``) the per-owner code-gather hops — from
         actual per-destination loads under the device's own hashes, not a
         uniform-hash bound.  ``slack`` defaults to this planner's slack.
+
+        With ``prune_tau``/``lengths_np`` the plan additionally sizes the
+        post-prune pair buffer (``DistributedPlan.pruned_cap``) from the
+        exact per-shard survivor counts of the MSS upper-bound pruning
+        pass.
         """
         from repro.api.sharded import plan_capacities
 
@@ -75,4 +83,5 @@ class CapacityPlanner:
             keys_np, n_shards,
             slack=self.slack if slack is None else slack,
             score_mode=score_mode,
+            lengths_np=lengths_np, prune_tau=prune_tau, betas_sum=betas_sum,
         )

@@ -63,7 +63,13 @@ class EngineConfig:
     backend: str = "ssh"            # candidate backend registry name
     backend_options: Mapping | None = None  # kwargs for the backend factory
     lcs_impl: str = "wavefront"     # "wavefront" | "ref" | "kernel" |
-    #                                 "pallas" | "pallas-interpret"
+    #                                 "pallas" | "pallas-interpret" |
+    #                                 "fused" | "fused-pallas" |
+    #                                 "fused-interpret"
+    score_prune: bool = False       # MSS upper-bound pruning before exact
+    #                                 scoring (tau = rho); changes the
+    #                                 scored buffer (hopeless pairs are
+    #                                 dropped) but never the similar set
     pair_capacity: int | None = None  # None -> plan from exact join size
     capacity_slack: float = 1.10
     community_mode: str = "cliques"  # "cliques" | "components"
@@ -196,9 +202,15 @@ class AnotherMeEngine:
         return self._mesh
 
     def _sharded_runner(self, dplan, key_fn, shapes):
+        from repro.core.similarity import wavefront_dtype_from_env
+
+        # the runner build resolves REPRO_LCS_DTYPE (lcs_impl_fn); keying
+        # the cache on the resolved dtype keeps the A/B probe live across
+        # runs of one engine, matching the single-device path
         cache_key = (
             dplan, self.plan.score_mode, self.config.lcs_impl,
-            key_fn is None, shapes,
+            self.config.score_prune, key_fn is None, shapes,
+            wavefront_dtype_from_env(),
         )
         runner = self._runner_cache.get(cache_key)
         if runner is None:
@@ -206,6 +218,8 @@ class AnotherMeEngine:
                 self.mesh(), dplan, betas=self.betas, key_fn=key_fn,
                 axis_name=self.plan.axis_name, score_mode=self.plan.score_mode,
                 lcs_impl=self.config.lcs_impl,
+                score_prune=self.config.score_prune,
+                prune_tau=self.config.rho,
             )
             self._runner_cache[cache_key] = runner
         return runner
@@ -251,9 +265,16 @@ class _ShardedEncodeJoinScoreStage:
                         plan.score_mode)
             dplan = eng._plan_cache.get(plan_key)
             if dplan is None:
+                prune_kw = {}
+                if config.score_prune:
+                    prune_kw = dict(
+                        lengths_np=np.asarray(ctx.batch.lengths),
+                        prune_tau=config.rho,
+                        betas_sum=float(np.asarray(eng.betas, np.float32).sum()),
+                    )
                 dplan = eng.planner.plan_sharded(
                     keys_np, plan.n_shards, slack=plan.shard_slack,
-                    score_mode=plan.score_mode,
+                    score_mode=plan.score_mode, **prune_kw,
                 )
         key_fn = ctx.backend.shard_key_fn(ctx.backend_ctx)
 
@@ -264,6 +285,8 @@ class _ShardedEncodeJoinScoreStage:
             shard_plan=dataclasses.asdict(dplan),
             join_overflow=int(np.asarray(out["overflow"]).sum()),
         )
+        if config.score_prune:
+            instr.record(num_pruned=int(np.asarray(out["pruned"]).sum()))
 
         left = np.asarray(out["left"]).reshape(-1)
         right = np.asarray(out["right"]).reshape(-1)
@@ -302,5 +325,6 @@ class _ShardedEncodeJoinScoreStage:
                     pair_route_cap=dplan.pair_route_cap * 2,
                     scored_cap=dplan.scored_cap * 2,
                     owner_route_cap=dplan.owner_route_cap * 2,
+                    pruned_cap=dplan.pruned_cap * 2,
                 )
         return out, dplan

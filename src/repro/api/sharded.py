@@ -47,7 +47,9 @@ import numpy as np
 from repro.core import compat
 from repro.core.encoding import encode_codes
 from repro.core.shingling import shingles_from_types
-from repro.core.similarity import mss_scores, multi_level_lcs
+from repro.core.similarity import (
+    PRUNE_EPS, mss_scores, mss_upper_bound, multi_level_lcs,
+)
 from repro.core.ssh import _runs, dedup_pairs, pairs_from_rows
 from repro.core.types import PAD_ID, PAD_KEY
 
@@ -108,6 +110,20 @@ def _route(
     return tuple(outs), overflow
 
 
+def _fit(x: jnp.ndarray, cap: int, pad_val) -> jnp.ndarray:
+    """Pad or truncate the leading axis of ``x`` to exactly ``cap`` rows.
+
+    Truncation is only safe on buffers whose valid rows are already
+    compacted to the front (dedup / argsort upstream); callers surface the
+    excess through an overflow counter.
+    """
+    m = x.shape[0]
+    if m >= cap:
+        return x[:cap]
+    padw = [(0, cap - m)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, padw, constant_values=pad_val)
+
+
 @dataclasses.dataclass(frozen=True)
 class DistributedPlan:
     n_shards: int
@@ -118,6 +134,8 @@ class DistributedPlan:
     scored_cap: int         # deduped pairs per shard
     owner_route_cap: int = 0  # rows per (src, dst) bucket in the shuffle-mode
     #                           owner hops; 0 -> uniform fallback
+    pruned_cap: int = 0     # post-prune pairs per shard when the MSS
+    #                         upper-bound pruning pass runs; 0 -> scored_cap
 
 
 def plan_capacities(
@@ -128,6 +146,9 @@ def plan_capacities(
     quiet: bool = True,
     score_mode: str = "replicate",
     exact_pair_limit: int = 5_000_000,
+    lengths_np: np.ndarray | None = None,
+    prune_tau: float | None = None,
+    betas_sum: float = 1.0,
 ) -> DistributedPlan:
     """Host-side exact capacity planning from the actual join keys.
 
@@ -143,6 +164,14 @@ def plan_capacities(
     for every stage).  Above ``exact_pair_limit`` pre-dedup pairs the pair
     list is not materialized and the uniform-hash bound takes over (the
     overflow counters + retry doubling still catch any bust).
+
+    With ``prune_tau`` and ``lengths_np`` set, the plan also sizes
+    ``pruned_cap`` — the post-prune pair buffer — from the exact per-shard
+    survivor counts of the MSS upper-bound pruning pass
+    (``betas_sum * min(len_a, len_b) > tau``), using the same float32 bound
+    the device applies.  In ``score_mode="shuffle"`` pruning happens BEFORE
+    the owner hops, so the hop buckets and the resting buffer are sized
+    from survivors only.
     """
     n, s = keys_np.shape
     local_n = int(np.ceil(n / n_shards))
@@ -172,6 +201,7 @@ def plan_capacities(
 
     total_pairs = int(ranks.sum())
     owner_cap = 0
+    pruned_cap = 0
     if total_pairs <= exact_pair_limit:
         # materialize the pre-dedup pair list host-side (the driver's
         # statistics pass): element at sorted position p with in-run rank r
@@ -200,22 +230,47 @@ def plan_capacities(
         ded_dst = _pair_hash_np(ulo, uhi) % n_shards
         scored_need = int(np.bincount(ded_dst, minlength=n_shards).max()) \
             if uniq.size else 1
+        prune = prune_tau is not None and lengths_np is not None
+        if prune and uniq.size:
+            # survivors of the MSS upper-bound prune, same f32 test as the
+            # device pass; pruning runs after the dedup fit, so scored_cap
+            # keeps its pre-prune sizing and pruned_cap sizes what is left
+            ub = mss_upper_bound(lengths_np[ulo], lengths_np[uhi], betas_sum)
+            surv = ub > np.float32(prune_tau - PRUNE_EPS)
+        else:
+            surv = np.ones(ulo.shape, bool)
         if score_mode == "shuffle":
             # per-owner loads of the code-gather hops: dedup shard ->
             # owner(left) -> owner(right); pairs come to rest on
-            # owner(right), so scored_cap must hold that skew too
-            own_lo = ulo // local_n
-            own_hi = uhi // local_n
+            # owner(right).  Pruning happens before the hops, so with it on
+            # only survivors travel — hop buckets and the resting buffer
+            # are sized from the survivor subset.
+            own_lo = (ulo // local_n)[surv]
+            own_hi = (uhi // local_n)[surv]
             h1 = np.zeros((n_shards, n_shards), np.int64)
-            np.add.at(h1, (ded_dst, own_lo), 1)
+            np.add.at(h1, (ded_dst[surv], own_lo), 1)
             h2 = np.zeros((n_shards, n_shards), np.int64)
             np.add.at(h2, (own_lo, own_hi), 1)
             owner_cap = int(np.ceil(max(h1.max(), h2.max(), 1) * slack)) + 64
-            if uniq.size:
-                scored_need = max(
-                    scored_need,
-                    int(np.bincount(own_hi, minlength=n_shards).max()),
-                )
+            rest_need = int(np.bincount(own_hi, minlength=n_shards).max()) \
+                if own_hi.size else 1
+            if prune:
+                # the post-prune buffer first holds survivors compacted AT
+                # the dedup shard (before the hops), then the resting
+                # loads at owner(right) — size for both skews
+                surv_need = int(
+                    np.bincount(ded_dst[surv], minlength=n_shards).max()
+                ) if surv.any() else 1
+                pruned_cap = int(
+                    np.ceil(max(surv_need, rest_need, 1) * slack)
+                ) + 64
+            else:
+                scored_need = max(scored_need, rest_need)
+        elif prune:
+            surv_need = int(
+                np.bincount(ded_dst[surv], minlength=n_shards).max()
+            ) if surv.any() else 1
+            pruned_cap = int(np.ceil(max(surv_need, 1) * slack)) + 64
         cap4 = int(np.ceil(max(scored_need, 1) * slack)) + 64
     else:
         # uniform-hash bound with extra slack (skew caught by overflow+retry)
@@ -226,7 +281,7 @@ def plan_capacities(
     return DistributedPlan(
         n_shards=n_shards, local_n=local_n, shingle_route_cap=cap1,
         local_pair_cap=cap2, pair_route_cap=cap3, scored_cap=cap4,
-        owner_route_cap=owner_cap,
+        owner_route_cap=owner_cap, pruned_cap=pruned_cap,
     )
 
 
@@ -239,6 +294,8 @@ def make_sharded_pipeline(
     axis_name: str = "ex",
     score_mode: str = "replicate",
     lcs_impl: str = "wavefront",
+    score_prune: bool = False,
+    prune_tau: float = 0.0,
 ):
     """Build the jitted shard_map encode+join+score pipeline.
 
@@ -275,14 +332,29 @@ def make_sharded_pipeline(
 
     lcs_impl selects the scoring implementation exactly as on the
     single-device path: "wavefront" / "ref" / "kernel" (auto Pallas) /
-    "pallas" (forced Pallas) / "pallas-interpret".
+    "pallas" (forced Pallas) / "pallas-interpret", plus the gather-free
+    fused family "fused" / "fused-pallas" / "fused-interpret" — the fused
+    kernel scores pairs straight out of the device-resident code table
+    ("replicate") or the hop-gathered operand stacks ("shuffle") with the
+    MSS epilogue fused in.
+
+    score_prune runs the MSS upper-bound pruning pass IN-MESH, right after
+    the pair dedup and before any code row moves for scoring: per-shard
+    lengths are all_gathered (an [N] int32 vector, not the code table), the
+    free bound ``sum_h beta_h * min(len_a, len_b)`` is tested against
+    ``prune_tau``, and survivors are compacted into the planned
+    ``pruned_cap`` buffer.  In "shuffle" mode this happens before the owner
+    hops, so pruned pairs never travel.
     """
     from jax.sharding import PartitionSpec as P
 
-    from repro.api.stages import lcs_impl_fn
+    from repro.api.stages import FUSED_MODES, lcs_impl_fn
 
     n_shards = plan.n_shards
-    impl = lcs_impl_fn(lcs_impl)
+    fused_mode = FUSED_MODES.get(lcs_impl)
+    impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl)
+    out_cap = (plan.pruned_cap or plan.scored_cap) if score_prune \
+        else plan.scored_cap
 
     def shard_fn(first, places, lengths, tables):
         # first: LOCAL keys rows (key_fn=None mode) or unused; places,
@@ -325,17 +397,36 @@ def make_sharded_pipeline(
         # per-source buckets; dedup's sort compacts them to the front), then
         # fit to scored_cap with the excess surfaced as overflow
         cand = dedup_pairs(rlo, rhi)
-
-        def fit_pairs(x):
-            m = x.shape[0]
-            if m >= plan.scored_cap:
-                return x[: plan.scored_cap]
-            return jnp.pad(x, (0, plan.scored_cap - m),
-                           constant_values=PAD_ID)
-
-        left = fit_pairs(cand.left)
-        right = fit_pairs(cand.right)
+        left = _fit(cand.left, plan.scored_cap, PAD_ID)
+        right = _fit(cand.right, plan.scored_cap, PAD_ID)
         ovf4 = jnp.maximum(cand.count - plan.scored_cap, 0)
+
+        # MSS upper-bound pruning pass: drop pairs that cannot reach tau
+        # BEFORE any code row moves for scoring.  Only the [N] lengths
+        # vector is gathered (int32, tiny) — never the code table.
+        n_pruned = jnp.zeros((), jnp.int32)
+        if score_prune:
+            lengths_all = jax.lax.all_gather(
+                lengths, axis_name, axis=0, tiled=True
+            )
+            pl_valid = left != PAD_ID
+            sl = jnp.where(pl_valid, left, 0)
+            sr = jnp.where(pl_valid, right, 0)
+            ub = mss_upper_bound(lengths_all[sl], lengths_all[sr],
+                                 jnp.sum(betas))
+            keep = pl_valid & (ub > prune_tau - PRUNE_EPS)
+            n_keep = jnp.sum(keep).astype(jnp.int32)
+            n_pruned = jnp.sum(pl_valid).astype(jnp.int32) - n_keep
+            order = jnp.argsort(jnp.logical_not(keep), stable=True)
+            slots = jnp.arange(out_cap, dtype=jnp.int32)
+            # out_cap may exceed scored_cap (skewed owners): pad, then mask
+            left = jnp.where(
+                slots < n_keep, _fit(left[order], out_cap, PAD_ID), PAD_ID
+            )
+            right = jnp.where(
+                slots < n_keep, _fit(right[order], out_cap, PAD_ID), PAD_ID
+            )
+            ovf4 = ovf4 + jnp.maximum(n_keep - out_cap, 0)
 
         # phase (iii): scoring, through the selected lcs_impl
         if score_mode == "replicate":
@@ -343,38 +434,63 @@ def make_sharded_pipeline(
             codes_all = jax.lax.all_gather(codes, axis_name, axis=0, tiled=True)
             li = jnp.where(left == PAD_ID, 0, left)
             ri = jnp.where(right == PAD_ID, 0, right)
-            level_lcs = multi_level_lcs(
-                codes_all[li], _lengths_of(codes_all[li]),
-                codes_all[ri], _lengths_of(codes_all[ri]), impl=impl,
-            )
+            if fused_mode is not None:
+                from repro.kernels.lcs.fused import fused_score
+
+                len_all = _lengths_of(codes_all)
+                level_lcs, mss = fused_score(
+                    codes_all, len_all, codes_all, len_all, li, ri, betas,
+                    mode=fused_mode,
+                )
+            else:
+                level_lcs = multi_level_lcs(
+                    codes_all[li], _lengths_of(codes_all[li]),
+                    codes_all[ri], _lengths_of(codes_all[ri]), impl=impl,
+                )
+                mss = mss_scores(level_lcs, betas)
             ovf5 = jnp.zeros((), jnp.int32)
         else:
             left, right, codes_l, codes_r, ovf5 = _gather_pair_codes(
-                left, right, codes, gid0, plan, n_shards, axis_name
+                left, right, codes, gid0, plan, n_shards, axis_name, out_cap
             )
-            level_lcs = multi_level_lcs(
-                codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r),
-                impl=impl,
-            )
-        mss = mss_scores(level_lcs, betas)
+            if fused_mode is not None:
+                from repro.kernels.lcs.fused import fused_score
+
+                # the gather already happened via the owner hops; the fused
+                # kernel runs level-fused over the operand stacks via iota
+                iota = jnp.arange(out_cap, dtype=jnp.int32)
+                level_lcs, mss = fused_score(
+                    codes_l, _lengths_of(codes_l),
+                    codes_r, _lengths_of(codes_r), iota, iota, betas,
+                    mode=fused_mode,
+                )
+            else:
+                level_lcs = multi_level_lcs(
+                    codes_l, _lengths_of(codes_l),
+                    codes_r, _lengths_of(codes_r), impl=impl,
+                )
+                mss = mss_scores(level_lcs, betas)
         mss = jnp.where(left == PAD_ID, -1.0, mss)
         overflow = jnp.stack([ovf1 + ovf2, ovf3, ovf4 + ovf5]).astype(jnp.int32)
-        return left, right, level_lcs, mss, overflow
+        return left, right, level_lcs, mss, overflow, n_pruned.reshape(1)
 
     def _lengths_of(code_rows):
         # lengths reconstructed from the padding sentinel in level 0
         return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
 
-    def _gather_pair_codes(left, right, codes_local, gid0, plan, n, axis):
+    def _gather_pair_codes(left, right, codes_local, gid0, plan, n, axis,
+                           out_cap):
         """Shuffle-mode scoring: route pairs to owner(left), attach that
         shard's code rows, then to owner(right), attach, return to a
         balanced layout (pairs stay wherever owner(right) is — dedup already
         guaranteed global uniqueness).  Hop buckets are sized from the
         exactly-planned per-owner loads (plan.owner_route_cap); without a
         plan the uniform fallback applies and overflow counters catch skew.
+        ``out_cap`` is the resting buffer size — the post-prune capacity
+        when the pruning pass ran, else plan.scored_cap.
         """
         H, L = codes_local.shape[1], codes_local.shape[2]
-        cap = plan.owner_route_cap or (plan.scored_cap // n + 64)
+        cap = plan.owner_route_cap or (out_cap // n + 64)
         # hop 1: to owner(left)
         (l1, r1), o1 = _route(
             (left, right), left // plan.local_n, left != PAD_ID,
@@ -401,36 +517,33 @@ def make_sharded_pipeline(
         l2, r2 = l2[order], r2[order]
         cl_rows, cr = cl_rows[order], cr[order]
         n_valid = jnp.sum(l2 != PAD_ID).astype(jnp.int32)
-        ovf_fit = jnp.maximum(n_valid - plan.scored_cap, 0)
-
-        # pad/truncate to scored_cap for a stable output shape
-        def fit(x, pad_val):
-            m = x.shape[0]
-            if m >= plan.scored_cap:
-                return x[: plan.scored_cap]
-            padw = [(0, plan.scored_cap - m)] + [(0, 0)] * (x.ndim - 1)
-            return jnp.pad(x, padw, constant_values=pad_val)
-
-        return (fit(l2, PAD_ID), fit(r2, PAD_ID), fit(cl_rows, 0),
-                fit(cr, 0), o1 + o2 + ovf_fit)
+        ovf_fit = jnp.maximum(n_valid - out_cap, 0)
+        # pad/truncate to out_cap for a stable output shape
+        return (_fit(l2, out_cap, PAD_ID), _fit(r2, out_cap, PAD_ID),
+                _fit(cl_rows, out_cap, 0), _fit(cr, out_cap, 0),
+                o1 + o2 + ovf_fit)
 
     spec_in = (
         P(axis_name, None), P(axis_name, None), P(axis_name), P(None, None),
     )
-    spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name), P(axis_name))
+    spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
+                P(axis_name), P(axis_name))
     fn = compat.shard_map(
         shard_fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out
     )
 
     @jax.jit
     def run(first, places, lengths, tables):
-        left, right, level_lcs, mss, overflow = fn(first, places, lengths, tables)
+        left, right, level_lcs, mss, overflow, pruned = fn(
+            first, places, lengths, tables
+        )
         return {
             "left": left.reshape(n_shards, -1),
             "right": right.reshape(n_shards, -1),
-            "level_lcs": level_lcs.reshape(n_shards, plan.scored_cap, -1),
+            "level_lcs": level_lcs.reshape(n_shards, out_cap, -1),
             "mss": mss.reshape(n_shards, -1),
             "overflow": overflow.reshape(n_shards, -1),
+            "pruned": pruned.reshape(n_shards),
         }
 
     return run

@@ -22,19 +22,32 @@ import repro.core.communities as comm
 from repro.core.encoding import (
     PAD_CODE_A, PAD_CODE_B, SemanticForest, encode_batch,
 )
-from repro.core.similarity import mss_scores, repad, score_pairs
+from repro.core.similarity import (
+    PRUNE_EPS, mss_scores, mss_upper_bound, repad, score_pairs,
+    wavefront_dtype_from_env,
+)
 from repro.core.ssh import ssh_candidates
 from repro.core.types import (
     CandidatePairs, EncodedBatch, PAD_ID, ScoredPairs, TrajectoryBatch,
 )
+from repro.kernels.lcs.fused import FUSED_IMPL_MODES
 
-LCS_IMPLS = ("wavefront", "ref", "kernel", "pallas", "pallas-interpret")
+LCS_IMPLS = (
+    "wavefront", "ref", "kernel", "pallas", "pallas-interpret",
+    "fused", "fused-pallas", "fused-interpret",
+)
 
 # kernel-family impls map to a dispatch mode of kernels/lcs/ops.py:
 #   "kernel"           auto (wavefront for tiny batches off-TPU)
 #   "pallas"           forced Pallas dispatch (interpret off-TPU)
 #   "pallas-interpret" forced Pallas dispatch, interpreter everywhere
 _KERNEL_MODES = {"kernel": "auto", "pallas": "pallas", "pallas-interpret": "interpret"}
+
+# fused-family impls map to a dispatch mode of kernels/lcs/fused.py: the
+# gather-free scalar-prefetch kernel that scores pairs straight out of the
+# resident code table (no [P, H, L] operand materialization).  The mapping
+# lives with the kernel (one place to add a variant); this is a re-export.
+FUSED_MODES = FUSED_IMPL_MODES
 
 
 def validate_lcs_impl(name: str) -> str:
@@ -50,16 +63,29 @@ def lcs_impl_fn(name: str):
 
     Shared by the single-device score stage and the sharded shard_map score
     stage, so ``lcs_impl`` selects the same implementation on both paths.
+    The fused family takes the code table plus pair indices rather than
+    gathered operands, so it has no pairwise form — callers route it through
+    ``kernels/lcs/fused.fused_score`` (see FUSED_MODES) instead.
     """
     validate_lcs_impl(name)
+    if name in FUSED_MODES:
+        raise ValueError(
+            f"lcs_impl {name!r} is table-indexed (gather-free); it has no "
+            "pairwise (a, b) form — dispatch through "
+            "repro.kernels.lcs.fused.fused_score"
+        )
     if name in _KERNEL_MODES:
         from repro.kernels.lcs import ops as lcs_ops
 
         mode = _KERNEL_MODES[name]
-        return lambda a, b: lcs_ops.lcs(a, b, mode=mode)
+        dt = wavefront_dtype_from_env()  # resolved here, at the call boundary
+        return lambda a, b: lcs_ops.lcs(a, b, mode=mode, wavefront_dtype=dt)
     from repro.core.similarity import lcs_ref, lcs_wavefront
 
-    return lcs_ref if name == "ref" else lcs_wavefront
+    if name == "ref":
+        return lcs_ref
+    dt = wavefront_dtype_from_env()
+    return lambda a, b: lcs_wavefront(a, b, dtype=dt)
 
 
 @dataclasses.dataclass
@@ -143,13 +169,30 @@ class CandidateStage:
 
 
 class ScoreStage:
-    """Phase (iii): multi-level LCS + MSS scoring, then the rho threshold."""
+    """Phase (iii): multi-level LCS + MSS scoring, then the rho threshold.
+
+    With ``config.score_prune`` the stage first runs the MSS upper-bound
+    pruning pass (REPOSE-style): pairs whose free bound
+    ``sum_h beta_h * min(len_a, len_b)`` cannot clear ``rho`` are compacted
+    away before exact scoring, into a buffer the CapacityPlanner sizes from
+    the survivor count — the pruned pairs never touch a kernel.
+    """
 
     name = "score"
 
     def run(self, ctx: PipelineContext) -> None:
         cfg, cand = ctx.config, ctx.candidates
         impl = validate_lcs_impl(cfg.lcs_impl)
+        if getattr(cfg, "score_prune", False):
+            with ctx.instr.phase("prune"):
+                cand, num_pruned = prune_candidates(
+                    cand, ctx.encoded.lengths, ctx.betas, cfg.rho, ctx.planner
+                )
+            ctx.candidates = cand
+            ctx.instr.record(
+                num_pruned=num_pruned,
+                post_prune_capacity=int(cand.left.shape[0]),
+            )
         with ctx.instr.phase("score"):
             if impl in _KERNEL_MODES:
                 level_lcs, mss = _score_with_kernel(
@@ -159,6 +202,7 @@ class ScoreStage:
                 level_lcs, mss = score_pairs(
                     ctx.encoded.codes, ctx.encoded.lengths,
                     cand.left, cand.right, ctx.betas, impl_name=impl,
+                    wavefront_dtype=wavefront_dtype_from_env(),
                 )
             mss.block_until_ready()
 
@@ -207,6 +251,45 @@ class CommunitiesStage:
                     "valid modes: ['cliques', 'components']"
                 )
         ctx.instr.record(num_communities=len(ctx.communities))
+
+
+def prune_candidates(
+    cand: CandidatePairs,
+    lengths,
+    betas,
+    tau: float,
+    planner: CapacityPlanner,
+) -> tuple[CandidatePairs, int]:
+    """MSS upper-bound pruning: drop pairs that cannot reach ``tau``.
+
+    The bound is free — ``sum_h beta_h * min(len_a, len_b)`` needs lengths
+    only — and safe: ``MSS <= bound``, so a dropped pair can never satisfy
+    ``mss > tau`` (a PRUNE_EPS of slack keeps exact-threshold ties on the
+    scored side).  Survivors are compacted to the front of a fresh buffer
+    sized by the planner from the survivor count, so the exact-scoring
+    kernel downstream runs over the post-prune pair set, not the full
+    candidate buffer.  Returns (compacted candidates, number pruned).
+    """
+    left = np.asarray(cand.left)
+    right = np.asarray(cand.right)
+    lengths = np.asarray(lengths)
+    valid = left != PAD_ID
+    safe_l = np.where(valid, left, 0)
+    safe_r = np.where(valid, right, 0)
+    bsum = float(np.asarray(betas, np.float32).sum())
+    ub = mss_upper_bound(lengths[safe_l], lengths[safe_r], bsum)
+    keep = valid & (ub > np.float32(tau - PRUNE_EPS))
+    idx = np.nonzero(keep)[0]
+    cap = planner.initial_capacity(len(idx))
+    new_left = np.full((cap,), PAD_ID, np.int32)
+    new_right = np.full((cap,), PAD_ID, np.int32)
+    new_left[: len(idx)] = left[idx]
+    new_right[: len(idx)] = right[idx]
+    pruned = CandidatePairs(
+        left=jnp.asarray(new_left), right=jnp.asarray(new_right),
+        count=jnp.asarray(len(idx), jnp.int32), overflow=cand.overflow,
+    )
+    return pruned, int(valid.sum()) - len(idx)
 
 
 def _score_with_kernel(encoded, cand, betas, *, mode="auto"):

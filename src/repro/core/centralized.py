@@ -12,7 +12,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.encoding import EncodedBatch
-from repro.core.similarity import default_betas, score_pairs
+from repro.core.similarity import (
+    default_betas, score_pairs, wavefront_dtype_from_env,
+)
 
 
 def all_pairs(n: int) -> tuple[np.ndarray, np.ndarray]:
@@ -41,7 +43,8 @@ def centralized_similar_pairs(
         if pad:
             l = jnp.concatenate([l, jnp.zeros((pad,), jnp.int32)])
             r = jnp.concatenate([r, jnp.zeros((pad,), jnp.int32)])
-        _, mss = score_pairs(encoded.codes, encoded.lengths, l, r, betas)
+        _, mss = score_pairs(encoded.codes, encoded.lengths, l, r, betas,
+                             wavefront_dtype=wavefront_dtype_from_env())
         mss = np.asarray(mss)[: chunk - pad if pad else chunk]
         keep = mss > rho
         out_l.append(li[s : s + chunk][keep])

@@ -70,8 +70,22 @@ def lcs_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return final[:, -1]
 
 
-@jax.jit
-def lcs_wavefront(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+def wavefront_dtype_from_env() -> jnp.dtype:
+    """Resolve the REPRO_LCS_DTYPE A/B probe at a *call boundary*.
+
+    Must run in eager Python (a stage, an ops wrapper, a benchmark), never
+    inside a jitted body: the dtype is a static jit argument downstream, so
+    resolving it here keeps the env var out of every trace cache.
+    """
+    import os
+
+    return jnp.int32 if os.environ.get("REPRO_LCS_DTYPE") == "int32" else jnp.int8
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def lcs_wavefront(
+    a: jnp.ndarray, b: jnp.ndarray, *, dtype: jnp.dtype = jnp.int8
+) -> jnp.ndarray:
     """Anti-diagonal wavefront LCS, batched: a [B, La], b [B, Lb] -> int32 [B].
 
     dp[i, j] laid out along diagonals t = i + j; diagonal t stored as
@@ -79,14 +93,14 @@ def lcs_wavefront(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     entries are never read by valid cells — see DESIGN.md).  2 rolling
     diagonals, La + Lb - 1 steps of pure vector ops.
 
-    The diagonals are carried in int8 (LCS values <= L < 127; §Perf
-    anotherme/v2: the scan carry crosses fusion/HBM boundaries every step,
-    so carry width sets the memory term); REPRO_LCS_DTYPE=int32 restores
-    the baseline for A/B probes.
+    The diagonals are carried in ``dtype`` — int8 by default (LCS values
+    <= L < 127; §Perf anotherme/v2: the scan carry crosses fusion/HBM
+    boundaries every step, so carry width sets the memory term).  ``dtype``
+    is a static argument so the choice is part of the jit cache key;
+    callers honouring the REPRO_LCS_DTYPE probe thread
+    :func:`wavefront_dtype_from_env` in from eager code.
     """
-    import os
-
-    cdt = jnp.int32 if os.environ.get("REPRO_LCS_DTYPE") == "int32" else jnp.int8
+    cdt = dtype
     B, La = a.shape
     Lb = b.shape[1]
     assert La < 127 and Lb < 127
@@ -153,7 +167,30 @@ def default_betas(n_levels: int) -> jnp.ndarray:
     return jnp.full((n_levels,), 1.0 / n_levels, dtype=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("impl_name",))
+def mss_upper_bound(len_a, len_b, betas_sum):
+    """The free MSS upper bound: ``sum_h beta_h * min(len_a, len_b)``.
+
+    Every level's LCS is at most ``min(len_a, len_b)`` (lengths are shared
+    across levels), so ``MSS <= betas_sum * min(len_a, len_b)`` — computable
+    from lengths alone, before any code row is touched.  Traceable on jnp
+    arrays and exact on np arrays; float32 either way so the device pruning
+    pass and the host capacity planner agree on the bound.
+    """
+    import numpy as np
+
+    if isinstance(len_a, np.ndarray):
+        return np.minimum(len_a, len_b).astype(np.float32) * np.float32(betas_sum)
+    return jnp.minimum(len_a, len_b).astype(jnp.float32) * betas_sum
+
+
+# Pruning keeps a pair when its upper bound clears ``tau - PRUNE_EPS``: the
+# hair of slack only ever keeps extra pairs (which then get scored exactly),
+# guarding against the bound and the float32 MSS rounding in opposite
+# directions around an exact-threshold tie.
+PRUNE_EPS = 1e-5
+
+
+@functools.partial(jax.jit, static_argnames=("impl_name", "wavefront_dtype"))
 def score_pairs(
     codes: jnp.ndarray,
     lengths: jnp.ndarray,
@@ -161,16 +198,33 @@ def score_pairs(
     right: jnp.ndarray,
     betas: jnp.ndarray,
     impl_name: str = "wavefront",
+    wavefront_dtype: jnp.dtype | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Gather + score candidate pairs against the encoded table.
 
     codes [N, H, L], lengths [N], left/right [P] -> (level_lcs [P, H], mss [P]).
     Invalid slots (PAD_ID) are clamped to row 0; callers mask by pair validity.
+
+    ``impl_name="fused"`` (and the forced "fused-pallas"/"fused-interpret"
+    variants) routes to the gather-free fused Pallas kernel
+    (kernels/lcs/fused.py), which never materializes the [P, H, L] operand
+    copies this gather path builds.
     """
     from repro.core.types import PAD_ID
 
-    impl = {"wavefront": lcs_wavefront, "ref": lcs_ref}[impl_name]
     li = jnp.where(left == PAD_ID, 0, left)
     ri = jnp.where(right == PAD_ID, 0, right)
+    if impl_name.startswith("fused"):
+        from repro.kernels.lcs import fused
+
+        mode = fused.FUSED_IMPL_MODES[impl_name]
+        return fused.fused_score(
+            codes, lengths, codes, lengths, li, ri, betas, mode=mode
+        )
+    if impl_name == "wavefront":
+        dt = jnp.int8 if wavefront_dtype is None else wavefront_dtype
+        impl = functools.partial(lcs_wavefront, dtype=dt)
+    else:
+        impl = {"ref": lcs_ref}[impl_name]
     lv = multi_level_lcs(codes[li], lengths[li], codes[ri], lengths[ri], impl=impl)
     return lv, mss_scores(lv, betas)

@@ -1,1 +1,2 @@
 from repro.kernels.lcs.ops import lcs
+from repro.kernels.lcs.fused import fused_gather_score, fused_score

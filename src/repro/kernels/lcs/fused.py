@@ -1,0 +1,229 @@
+"""Fused gather-and-score Pallas TPU kernel: table -> (level_lcs, MSS).
+
+The hot path of the pipeline is exact pair scoring: for every surviving
+candidate pair (l, r), the LCS of the two trajectories' encodings at every
+semantic level, beta-combined into the MSS (paper section IV.3).  The
+baseline path (``score_pairs`` -> ``multi_level_lcs``) first materializes
+TWO full ``[P, H, L]`` gathered-and-repadded operand copies in HBM before
+any kernel runs, so scoring is memory-bound long before it is compute-bound.
+
+This kernel makes scoring gather-free and level-fused:
+
+* **Scalar-prefetched gather** — the pair index arrays ``left/right [P]``
+  (plus the length tables) ride in SMEM via
+  ``pltpu.PrefetchScalarGridSpec``; the operand BlockSpec index maps read
+  ``left[p]`` / ``right[p]`` so grid block ``p`` DMAs its own two
+  ``[H, L]`` rows straight out of the resident code table.  The gathered
+  ``[P, H, L]`` copies never exist in HBM, and the grid pipeline overlaps
+  each block's row DMA with the previous block's wavefront.
+* **In-register repad** — rows arrive with whatever padding the table
+  carries; the kernel masks positions ``>= length`` to the standard
+  sentinels (side A: -1, side B: -2, exactly ``similarity.repad``) in
+  VREGs, so the host-side repad round trip disappears too.
+* **Level fusion** — all H levels of a pair run through the rolling-window
+  wavefront (see kernels/lcs/kernel.py for the window scheme) in ONE block
+  as an [H, L+1] tile, with the two rolling diagonals carried in int8
+  (LCS <= L < 127).
+* **Fused MSS** — the block emits ``level_lcs [1, H]`` AND the
+  beta-weighted ``mss [1, 1]`` (``sum_h beta_h * |M_h|``), fusing
+  ``mss_scores`` into the kernel epilogue.  The in-block float32 sum can
+  differ from the XLA lowering of ``mss_scores`` by 1 ulp (XLA may
+  FMA-contract the batched multiply+reduce), so the dispatch wrapper
+  recomputes the authoritative ``mss`` from the integer ``level_lcs``
+  through ``mss_scores`` itself by default (``exact_mss=True``) — an O(PH)
+  epilogue that keeps every ``lcs_impl`` bit-identical — and returns the
+  kernel's own epilogue with ``exact_mss=False`` (the pure-throughput
+  path, e.g. benchmarking).
+
+Two tables are taken (``table_a``/``table_b``) so the same kernel serves
+both sharded score modes: "replicate" passes the all_gathered code table
+twice with real pair indices, "shuffle" passes the two per-shard gathered
+operand stacks with iota indices (the gather there already happened via
+the owner hops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
+from repro.kernels.lcs.kernel import SENT_SHIFT, SENT_WINDOW
+
+# the canonical lcs_impl-name -> dispatch-mode mapping for the fused family;
+# every registration point (stages, score_pairs, the sharded pipeline)
+# imports THIS dict so a new variant is added in exactly one place
+FUSED_IMPL_MODES = {
+    "fused": "auto",
+    "fused-pallas": "pallas",
+    "fused-interpret": "interpret",
+}
+
+_DISPATCH_MODES = ("auto", "pallas", "interpret", "ref")
+
+
+def _fused_kernel(li_ref, ri_ref, lena_ref, lenb_ref,
+                  a_ref, b_ref, betas_ref, lvl_ref, mss_ref):
+    p = pl.program_id(0)
+    la = lena_ref[li_ref[p]]
+    lb = lenb_ref[ri_ref[p]]
+    a = a_ref[0]  # [H, L] int32 — our pair's left row, DMA'd by index map
+    b = b_ref[0]
+    H, L = a.shape
+
+    # in-register repad: positions >= length become the side sentinels
+    pos = jax.lax.broadcasted_iota(jnp.int32, (H, L), 1)
+    a = jnp.where(pos < la, a, PAD_CODE_A)
+    b = jnp.where(pos < lb, b, PAD_CODE_B)
+
+    # rolling-window wavefront over all H levels at once (kernel.py scheme),
+    # diagonals in int8: LCS values <= L < 127
+    a_ext = jnp.concatenate(
+        [jnp.full((H, 1), SENT_SHIFT, jnp.int32), a], axis=1
+    )
+    window = jnp.concatenate(
+        [
+            jnp.full((H, L), SENT_WINDOW, jnp.int32),
+            b[:, ::-1],
+            jnp.full((H, L - 1), SENT_WINDOW, jnp.int32),
+        ],
+        axis=1,
+    )
+    window = jnp.roll(window, -(2 * L - 2), axis=1)
+    zeros = jnp.zeros((H, L + 1), jnp.int8)
+
+    def shift_right(x):
+        return jnp.concatenate([jnp.zeros((H, 1), jnp.int8), x[:, :-1]], axis=1)
+
+    def step(_, carry):
+        d2, d1, win = carry
+        match = a_ext == win[:, : L + 1]
+        new = jnp.where(
+            match, shift_right(d2) + jnp.ones((), jnp.int8),
+            jnp.maximum(d1, shift_right(d1)),
+        )
+        return d1, new, jnp.roll(win, 1, axis=1)
+
+    _, d1, _ = jax.lax.fori_loop(0, 2 * L - 1, step, (zeros, zeros, window))
+    lvl = d1[:, L].astype(jnp.int32)  # dp[L, L] per level
+    lvl_ref[0, :] = lvl
+    # fused mss_scores epilogue: sum_h beta_h * |M_h| in float32
+    mss_ref[0, 0] = jnp.sum(lvl.astype(jnp.float32) * betas_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_gather_score(
+    table_a: jnp.ndarray,
+    len_a: jnp.ndarray,
+    table_b: jnp.ndarray,
+    len_b: jnp.ndarray,
+    left: jnp.ndarray,
+    right: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The raw kernel call: tables + pair indices -> (level_lcs, mss).
+
+    table_a [Na, H, L] int32, len_a [Na] int32 (idem _b), left/right [P]
+    int32 indices into the respective tables (pre-clamped: no PAD_ID), betas
+    [H] float32 -> (level_lcs [P, H] int32, mss [P] float32).
+    """
+    P = left.shape[0]
+    _, H, L = table_a.shape
+    assert L < 127 and table_b.shape[1:] == (H, L)
+    betas_row = betas.reshape(1, H).astype(jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # left, right, len_a, len_b
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, H, L), lambda p, li, ri, la, lb: (li[p], 0, 0)),
+            pl.BlockSpec((1, H, L), lambda p, li, ri, la, lb: (ri[p], 0, 0)),
+            pl.BlockSpec((1, H), lambda p, li, ri, la, lb: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H), lambda p, li, ri, la, lb: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, li, ri, la, lb: (p, 0)),
+        ],
+    )
+    lvl, mss = pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((P, H), jnp.int32),
+            jax.ShapeDtypeStruct((P, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        left.astype(jnp.int32), right.astype(jnp.int32),
+        len_a.astype(jnp.int32), len_b.astype(jnp.int32),
+        table_a, table_b, betas_row,
+    )
+    return lvl, mss[:, 0]
+
+
+def fused_score_ref(
+    table_a, len_a, table_b, len_b, left, right, betas
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp oracle for the fused kernel: the baseline gather-then-score path
+    (``multi_level_lcs`` + ``mss_scores``), bit-identical by construction to
+    ``score_pairs(..., impl_name="wavefront")``."""
+    from repro.core.similarity import mss_scores, multi_level_lcs
+
+    lvl = multi_level_lcs(
+        table_a[left], len_a[left], table_b[right], len_b[right]
+    )
+    return lvl, mss_scores(lvl, betas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_score(
+    table_a: jnp.ndarray,
+    len_a: jnp.ndarray,
+    table_b: jnp.ndarray,
+    len_b: jnp.ndarray,
+    left: jnp.ndarray,
+    right: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    mode: str = "auto",
+    exact_mss: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch wrapper mirroring kernels/lcs/ops.lcs:
+
+      "auto"       the kernel on TPU, the jnp reference elsewhere (the
+                   interpreter would be orders of magnitude slower than the
+                   wavefront on CPU) — the production default.
+      "pallas"     always the kernel (interpret off-TPU); parity tests that
+                   must prove the kernel really runs.
+      "interpret"  always the kernel with interpret=True, even on TPU.
+      "ref"        always the jnp gather-then-score reference.
+
+    ``exact_mss=True`` (default) recomputes the returned mss from the
+    kernel's integer level_lcs through ``mss_scores`` — the same lowering
+    every other lcs_impl uses, so scores stay bit-identical across impls.
+    ``exact_mss=False`` returns the kernel's fused in-block epilogue
+    (within 1 ulp; saves the O(PH) recompute on the throughput path).
+    """
+    if mode not in _DISPATCH_MODES:
+        raise ValueError(
+            f"unknown fused dispatch mode {mode!r}; "
+            f"valid: {list(_DISPATCH_MODES)}"
+        )
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return fused_score_ref(table_a, len_a, table_b, len_b, left, right, betas)
+    interpret = True if mode == "interpret" else not _on_tpu()
+    lvl, mss = fused_gather_score(
+        table_a, len_a, table_b, len_b, left, right, betas, interpret=interpret
+    )
+    if exact_mss:
+        from repro.core.similarity import mss_scores
+
+        mss = mss_scores(lvl, betas)
+    return lvl, mss

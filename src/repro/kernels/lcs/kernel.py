@@ -83,10 +83,20 @@ def lcs_pallas(
     block_b: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """a, b: int32 [B, L] (pre-padded, distinct sentinels) -> int32 [B]."""
+    """a, b: int32 [B, L] (pre-padded, distinct sentinels) -> int32 [B].
+
+    Any batch size works: a trailing partial tile is padded up to the next
+    ``block_b`` multiple with the standard (-1, -2) sentinels — which can
+    never match each other — and the result is sliced back to ``B``, so
+    callers no longer over-pad pair buffers to tile multiples themselves.
+    """
     B, L = a.shape
-    assert b.shape == (B, L) and B % block_b == 0
-    grid = (B // block_b,)
+    assert b.shape == (B, L)
+    pad = (-B) % block_b
+    if pad:
+        a = jnp.concatenate([a, jnp.full((pad, L), -1, jnp.int32)])
+        b = jnp.concatenate([b, jnp.full((pad, L), -2, jnp.int32)])
+    grid = ((B + pad) // block_b,)
     out = pl.pallas_call(
         _lcs_kernel,
         grid=grid,
@@ -95,7 +105,7 @@ def lcs_pallas(
             pl.BlockSpec((block_b, L), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((B + pad, 1), jnp.int32),
         interpret=interpret,
     )(a, b)
-    return out[:, 0]
+    return out[:B, 0]

@@ -19,13 +19,11 @@ can never contribute a match.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.lcs.kernel import lcs_pallas
-from repro.core.similarity import lcs_wavefront
+from repro.core.similarity import lcs_wavefront, wavefront_dtype_from_env
 
 
 def _on_tpu() -> bool:
@@ -40,18 +38,24 @@ def _block_for(batch: int, block_b: int) -> int:
     return b
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "mode"))
 def lcs(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
     block_b: int = 512,
     mode: str = "auto",
+    wavefront_dtype: jnp.dtype | None = None,
 ) -> jnp.ndarray:
     """Batched LCS: int32 [B, L] x2 -> int32 [B].
 
     Inputs must be sentinel-padded (side A: -1, side B: -2) as produced by
     repro.core.similarity.repad.
+
+    This wrapper is deliberately NOT jitted: it is pure dispatch (the kernel
+    and the wavefront are jitted themselves), and it is the call boundary
+    where the REPRO_LCS_DTYPE probe is resolved into the wavefront's static
+    ``dtype`` argument (``wavefront_dtype=None`` -> read the env var here,
+    never inside a trace).
     """
     if mode not in ("auto", "pallas", "interpret", "wavefront"):
         raise ValueError(
@@ -59,13 +63,11 @@ def lcs(
             "valid: ['auto', 'pallas', 'interpret', 'wavefront']"
         )
     B, L = a.shape
+    assert b.shape == (B, L)
     if mode == "wavefront" or (mode == "auto" and B < block_b and not _on_tpu()):
-        return lcs_wavefront(a, b)
+        if wavefront_dtype is None:
+            wavefront_dtype = wavefront_dtype_from_env()
+        return lcs_wavefront(a, b, dtype=wavefront_dtype)
     interpret = True if mode == "interpret" else not _on_tpu()
-    bb = _block_for(B, block_b)
-    pad = (-B) % bb
-    if pad:
-        a = jnp.concatenate([a, jnp.full((pad, L), -1, jnp.int32)])
-        b = jnp.concatenate([b, jnp.full((pad, L), -2, jnp.int32)])
-    out = lcs_pallas(a, b, block_b=bb, interpret=interpret)
-    return out[:B]
+    # lcs_pallas auto-pads any remainder rows up to the block multiple
+    return lcs_pallas(a, b, block_b=_block_for(B, block_b), interpret=interpret)

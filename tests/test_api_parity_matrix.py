@@ -1,9 +1,9 @@
 """Cross-backend parity matrix for the device-resident sharded pipeline.
 
-Pins the contract of ISSUE 2: every cell of
+Pins the contract of ISSUEs 2 and 3: every cell of
 
     {ssh, minhash, brp, udf} x {1, 2, 4 shards} x {replicate, shuffle}
-                             x {wavefront, pallas-interpret}
+                 x {wavefront, pallas-interpret, fused-interpret}
 
 produces identical similar pairs, identical communities and bit-identical
 per-pair scores to the single-device engine (and, at n_shards=1, to the
@@ -11,11 +11,13 @@ legacy ``run_anotherme``).  Sharded cells run in a subprocess (device count
 binds at jax init); one subprocess per backend keeps the matrix affordable
 while still compiling every (shards, mode, impl) program.
 
-Also proves the two structural claims:
+Also proves the structural claims:
 * with n_shards>1 the engine has NO host EncodeStage (encoding runs inside
   the shard_map program) and reports no ``t_encode`` phase;
 * ``lcs_impl="pallas-interpret"`` really dispatches ``lcs_pallas`` inside
-  the shard_map score stage (counted via monkeypatch at trace time).
+  the shard_map score stage (counted via monkeypatch at trace time);
+* ``lcs_impl="fused-interpret"`` really dispatches the gather-free
+  ``fused_gather_score`` kernel, on the single-device AND sharded paths.
 """
 import pytest
 
@@ -33,7 +35,7 @@ from repro.data import fig1_world
 backend = "%(backend)s"
 batch, forest = fig1_world()
 RHO = 3.0
-IMPLS = ("wavefront", "pallas-interpret")
+IMPLS = ("wavefront", "pallas-interpret", "fused-interpret")
 
 
 def score_map(res):
@@ -53,8 +55,10 @@ for impl in IMPLS:
     cfg = EngineConfig(backend=backend, rho=RHO, lcs_impl=impl)
     base[impl] = AnotherMeEngine(forest, cfg).run(batch)
 
-# engine vs engine across impls: integer LCS => bit-identical scores
+# engine vs engine across impls: integer LCS (and a fixed-order float32
+# MSS epilogue in the fused kernel) => bit-identical scores
 assert score_map(base["wavefront"]) == score_map(base["pallas-interpret"])
+assert score_map(base["wavefront"]) == score_map(base["fused-interpret"])
 
 # engine vs legacy (single device, ssh/udf share the lossless shingle join)
 if backend in ("ssh", "udf"):
@@ -122,6 +126,51 @@ def test_sharded_pallas_dispatch_is_real():
     """ExecutionPlan(lcs_impl=...) must route the Pallas kernel into the
     shard_map score stage — not silently fall back to the wavefront."""
     out = run_subprocess(PALLAS_DISPATCH_CODE, devices=4)
+    assert "OK" in out
+
+
+FUSED_DISPATCH_CODE = r"""
+import numpy as np
+import repro.kernels.lcs.fused as fused
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.data import fig1_world
+
+calls = []
+real = fused.fused_gather_score
+
+def counting(*args, **kwargs):
+    calls.append(kwargs.get("interpret"))
+    return real(*args, **kwargs)
+
+fused.fused_gather_score = counting
+batch, forest = fig1_world()
+cfg = EngineConfig(rho=3.0)
+single = AnotherMeEngine(forest, cfg).run(batch)
+assert not calls  # default wavefront impl never touches the fused kernel
+
+fused_single = AnotherMeEngine(
+    forest, EngineConfig(rho=3.0, lcs_impl="fused-interpret"),
+).run(batch)
+assert calls and all(interp is True for interp in calls), calls
+n_single = len(calls)
+
+sharded = AnotherMeEngine(
+    forest, cfg, ExecutionPlan(n_shards=4, lcs_impl="fused-interpret"),
+).run(batch)
+# traced (and therefore executed) inside the shard_map score stage too
+assert len(calls) > n_single and all(i is True for i in calls), calls
+assert fused_single.similar_pairs == single.similar_pairs
+assert sharded.similar_pairs == single.similar_pairs
+assert sharded.communities == single.communities
+print("OK", len(calls))
+"""
+
+
+def test_fused_dispatch_is_real():
+    """lcs_impl="fused-interpret" must route the gather-free fused kernel
+    into BOTH score paths — not silently fall back to the gather+wavefront
+    reference."""
+    out = run_subprocess(FUSED_DISPATCH_CODE, devices=4)
     assert "OK" in out
 
 

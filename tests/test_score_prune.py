@@ -1,0 +1,231 @@
+"""Property tests for the MSS upper-bound pruning pass.
+
+The contract (ISSUE 3): pruned-then-scored results equal
+score-everything-then-threshold.  Pruning drops pairs whose free bound
+``sum_h beta_h * min(len_a, len_b)`` cannot clear ``rho`` BEFORE exact
+scoring — so the scored buffer shrinks, but the similar-pair set, the
+communities, and every surviving pair's exact scores are unchanged,
+bit-for-bit, on the single-device and the sharded path alike.
+
+Worlds are random and length-skewed (seeded generators, same idiom as the
+other property tests): a heavy head of short trajectories makes the bound
+actually bite.  The all-pairs-pruned and nothing-pruned edges are pinned
+explicitly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+from repro.api import AnotherMeEngine, EngineConfig
+from repro.core.encoding import make_random_forest
+from repro.core.types import CandidatePairs, PAD_ID, TrajectoryBatch
+
+
+def _skewed_world(seed, n=40, max_len=12, num_places=200):
+    """A random world with a skewed length distribution (many short rows)."""
+    rng = np.random.default_rng(seed)
+    forest = make_random_forest(6, 4, num_places, seed=seed + 1)
+    lengths = rng.choice(
+        np.arange(3, max_len + 1),
+        size=n,
+        p=_skew_probs(max_len - 2),
+    ).astype(np.int32)
+    places = rng.integers(0, num_places, size=(n, max_len)).astype(np.int32)
+    places[np.arange(max_len)[None, :] >= lengths[:, None]] = -1
+    batch = TrajectoryBatch(
+        places=jnp.asarray(places), lengths=jnp.asarray(lengths),
+        user_id=jnp.arange(n, dtype=jnp.int32),
+    )
+    return batch, forest
+
+
+def _skew_probs(k):
+    w = 1.0 / np.arange(1, k + 1)
+    return w / w.sum()
+
+
+def _score_map(res):
+    left = np.asarray(res.scored.left)
+    right = np.asarray(res.scored.right)
+    mss = np.asarray(res.scored.mss)
+    lvl = np.asarray(res.scored.level_lcs)
+    keep = left != PAD_ID
+    return {
+        (int(a), int(b)): (float(m), tuple(int(x) for x in lv))
+        for a, b, m, lv in zip(left[keep], right[keep], mss[keep], lvl[keep])
+    }
+
+
+def _assert_prune_equiv(pruned_res, full_res, rho):
+    """pruned-then-scored == score-everything-then-threshold."""
+    assert pruned_res.similar_pairs == full_res.similar_pairs
+    assert pruned_res.communities == full_res.communities
+    pm, fm = _score_map(pruned_res), _score_map(full_res)
+    # survivors are a subset of the full scored set, bit-identical per pair
+    for pair, scores in pm.items():
+        assert fm[pair] == scores, pair
+    # and no pair that clears the threshold was pruned
+    for pair, (mss, _) in fm.items():
+        if mss > rho:
+            assert pair in pm, pair
+
+
+@pytest.mark.parametrize("seed,rho", [(0, 4.0), (1, 5.0), (2, 6.0), (3, 7.5)])
+@pytest.mark.parametrize("impl", ["wavefront", "fused-interpret"])
+def test_prune_equals_threshold(seed, rho, impl):
+    batch, forest = _skewed_world(seed)
+    full = AnotherMeEngine(
+        forest, EngineConfig(rho=rho, lcs_impl=impl)
+    ).run(batch)
+    pruned = AnotherMeEngine(
+        forest, EngineConfig(rho=rho, lcs_impl=impl, score_prune=True)
+    ).run(batch)
+    _assert_prune_equiv(pruned, full, rho)
+    n_full = len(_score_map(full))
+    n_kept = len(_score_map(pruned))
+    assert pruned.stats["num_pruned"] == n_full - n_kept
+    assert int(np.asarray(pruned.scored.overflow)) == 0
+
+
+def test_all_pairs_pruned_edge():
+    """rho above the best possible bound: every candidate is pruned, the
+    similar set is empty on both runs, and nothing is scored."""
+    batch, forest = _skewed_world(5, max_len=10)
+    rho = 10.0 + 1.0  # ub <= max_len * sum(betas) = 10 < rho
+    full = AnotherMeEngine(forest, EngineConfig(rho=rho)).run(batch)
+    pruned = AnotherMeEngine(
+        forest, EngineConfig(rho=rho, score_prune=True)
+    ).run(batch)
+    _assert_prune_equiv(pruned, full, rho)
+    assert full.similar_pairs == set()
+    assert len(_score_map(pruned)) == 0
+    assert pruned.stats["num_pruned"] == len(_score_map(full))
+
+
+def test_nothing_pruned_edge():
+    """rho below every bound: pruning keeps everything and the scored
+    buffers agree pair-for-pair."""
+    batch, forest = _skewed_world(6)
+    rho = 0.5  # every pair has ub >= min length (3) * sum(betas) = 3
+    full = AnotherMeEngine(forest, EngineConfig(rho=rho)).run(batch)
+    pruned = AnotherMeEngine(
+        forest, EngineConfig(rho=rho, score_prune=True)
+    ).run(batch)
+    _assert_prune_equiv(pruned, full, rho)
+    assert pruned.stats["num_pruned"] == 0
+    assert _score_map(pruned) == _score_map(full)
+
+
+def test_prune_candidates_unit():
+    """Direct unit test of the compaction: PAD slots stay out, survivors
+    compact to the front, exact-threshold ties are kept (scored, then
+    rejected by the strict > rho test), and the planner sizes the buffer."""
+    from repro.api.capacity import CapacityPlanner
+    from repro.api.stages import prune_candidates
+
+    lengths = jnp.asarray([10, 2, 10, 5], jnp.int32)
+    left = jnp.asarray([0, 1, 2, PAD_ID], jnp.int32)
+    right = jnp.asarray([2, 0, 3, PAD_ID], jnp.int32)
+    cand = CandidatePairs(
+        left=left, right=right,
+        count=jnp.asarray(3, jnp.int32), overflow=jnp.asarray(0, jnp.int32),
+    )
+    betas = jnp.asarray([0.5, 0.5], jnp.float32)  # betas_sum = 1.0
+    planner = CapacityPlanner(floor_pow2=2)
+    # tau = 5.0: (0,2) ub=10 kept; (1,0) ub=2 pruned; (2,3) ub=5 == tau ->
+    # cannot exceed tau but the eps guard keeps the tie on the scored side
+    pruned, n = prune_candidates(cand, lengths, betas, 5.0, planner)
+    got = np.asarray(pruned.left)
+    assert n == 1
+    assert int(pruned.count) == 2
+    assert got[0] == 0 and got[1] == 2
+    assert (got[2:] == PAD_ID).all()
+    # tau just above the tie: the length-5 pair is pruned too
+    pruned2, n2 = prune_candidates(cand, lengths, betas, 5.01, planner)
+    assert n2 == 2 and int(pruned2.count) == 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_shuffle_prune_plan_covers_dedup_shard_survivors(seed):
+    """In shuffle mode the post-prune buffer first holds survivors
+    compacted AT the dedup shard (before the owner hops), then the resting
+    loads at owner(right) — so shuffle-mode pruned_cap must be at least the
+    replicate-mode sizing (which is exactly the dedup-shard survivor
+    skew)."""
+    from repro.api.sharded import plan_capacities
+
+    rng = np.random.default_rng(seed)
+    n = 64
+    # heavy key skew: a few hot keys concentrate pairs on few dedup shards
+    keys = rng.choice([5, 5, 5, 7, 11, 13], size=(n, 4)).astype(np.int32)
+    lengths = rng.choice([3, 4, 10, 12], size=n).astype(np.int32)
+    kw = dict(lengths_np=lengths, prune_tau=6.0, betas_sum=1.0)
+    rep = plan_capacities(keys, 4, score_mode="replicate", **kw)
+    shf = plan_capacities(keys, 4, score_mode="shuffle", **kw)
+    assert shf.pruned_cap >= rep.pruned_cap
+    assert rep.pruned_cap > 0
+
+
+SHARDED_PRUNE_CODE = r"""
+import numpy as np
+import jax.numpy as jnp
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.core.encoding import make_random_forest
+from repro.core.types import PAD_ID, TrajectoryBatch
+
+rng = np.random.default_rng(11)
+n, L = 48, 12
+forest = make_random_forest(6, 4, 200, seed=2)
+lengths = rng.choice([3, 4, 5, 10, 11, 12], size=n).astype(np.int32)
+places = rng.integers(0, 200, size=(n, L)).astype(np.int32)
+places[np.arange(L)[None, :] >= lengths[:, None]] = -1
+batch = TrajectoryBatch(places=jnp.asarray(places),
+                        lengths=jnp.asarray(lengths),
+                        user_id=jnp.arange(n, dtype=jnp.int32))
+RHO = 6.0
+
+
+def score_map(res):
+    left = np.asarray(res.scored.left)
+    right = np.asarray(res.scored.right)
+    mss = np.asarray(res.scored.mss)
+    keep = left != PAD_ID
+    return {(int(a), int(b)): float(m)
+            for a, b, m in zip(left[keep], right[keep], mss[keep])}
+
+
+full = AnotherMeEngine(forest, EngineConfig(rho=RHO)).run(batch)
+fm = score_map(full)
+want_pruned = None
+for impl in ("wavefront", "fused-interpret"):
+    for n_shards, mode in ((1, "replicate"), (2, "replicate"),
+                           (2, "shuffle"), (4, "shuffle")):
+        res = AnotherMeEngine(
+            forest,
+            EngineConfig(rho=RHO, lcs_impl=impl, score_prune=True),
+            ExecutionPlan(n_shards=n_shards, score_mode=mode),
+        ).run(batch)
+        cell = (impl, n_shards, mode)
+        assert res.similar_pairs == full.similar_pairs, cell
+        assert res.communities == full.communities, cell
+        pm = score_map(res)
+        assert all(fm[k] == v for k, v in pm.items()), cell
+        assert all(k in pm for k, v in fm.items() if v > RHO), cell
+        got_pruned = res.stats["num_pruned"]
+        assert got_pruned > 0, cell
+        if want_pruned is None:
+            want_pruned = got_pruned
+        # every path prunes the exact same pair set
+        assert got_pruned == want_pruned, cell
+print("OK", want_pruned)
+"""
+
+
+def test_sharded_prune_parity():
+    """The in-mesh pruning pass drops the same pairs on every
+    {shards} x {score_mode} x {impl} cell as the single-device pass, and
+    the thresholded results match the unpruned run."""
+    out = run_subprocess(SHARDED_PRUNE_CODE, devices=4)
+    assert "OK" in out
