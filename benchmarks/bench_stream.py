@@ -1,0 +1,218 @@
+"""Streaming-ingestion benchmark: per-update latency vs one-shot re-runs.
+
+Feeds one synthetic world to a :class:`StreamingEngine` in micro-batches
+and, for the SAME prefix sizes, re-runs a one-shot ``AnotherMeEngine.run``
+over the growing concatenation — the two strategies an operator of the
+paper's continuously-collected LBS workload could choose between.  Writes
+``BENCH_stream.json`` so this and later PRs leave a recorded trajectory
+next to ``BENCH_score.json``; the tier-1 CI workflow runs ``--smoke`` and
+uploads the JSON as an artifact per PR.
+
+What the numbers mean (CPU smoke runs document the harness; the shape of
+the win — delta-proportional vs world-proportional updates — is backend
+independent):
+
+  stream        StreamingEngine.update per micro-batch: incremental bucket
+                probes + delta-only scoring against the resident table
+  oneshot       AnotherMeEngine.run over the full prefix, per micro-batch
+                (re-encode, re-join, re-score, re-cluster the world)
+
+Delta-only evidence is recorded per update: ``pairs_examined`` (pre-dedup
+collisions probed by the incremental index) against ``full_world_pairs``
+(the pre-dedup join size a one-shot re-run enumerates at that prefix) —
+the acceptance bound requires examined < full for every steady-state
+update, and the per-update counts sum exactly to the final full join.
+
+JSON schema (``schema: bench_stream/v1``)::
+
+    {
+      "schema": "bench_stream/v1",
+      "backend": "cpu" | "tpu" | ...,
+      "jax_version": "...",
+      "smoke": bool,
+      "grids": [
+        {"N": int, "updates": int, "batch": int, "backend": "ssh",
+         "stream": {"update_wall_s": [...], "updates_per_sec": float,
+                    "mean_update_s": float, "p50_update_s": float,
+                    "max_update_s": float,
+                    "pairs_examined": [...], "full_world_pairs": [...],
+                    "delta_only": bool},
+         "oneshot": {"update_wall_s": [...], "updates_per_sec": float,
+                     "mean_update_s": float},
+         "stream_vs_oneshot": float}, ...
+      ]
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_HERE)
+for p in (_REPO, os.path.join(_REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pieces(batch, k):
+    from repro.core.types import TrajectoryBatch
+
+    places = np.asarray(batch.places)
+    lengths = np.asarray(batch.lengths)
+    cuts = np.linspace(0, places.shape[0], k + 1).astype(int)
+    return [
+        TrajectoryBatch(
+            places=jnp.asarray(places[a:b]),
+            lengths=jnp.asarray(lengths[a:b]),
+            user_id=jnp.arange(b - a, dtype=jnp.int32),
+        )
+        for a, b in zip(cuts[:-1], cuts[1:])
+    ], cuts[1:]
+
+
+def _prefix(batch, end):
+    from repro.core.types import TrajectoryBatch
+
+    return TrajectoryBatch(
+        places=jnp.asarray(np.asarray(batch.places)[:end]),
+        lengths=jnp.asarray(np.asarray(batch.lengths)[:end]),
+        user_id=jnp.arange(end, dtype=jnp.int32),
+    )
+
+
+def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
+    """One grid cell: stream the world in ``updates`` micro-batches and
+    re-run one-shot over every prefix; returns the cell report dict."""
+    from repro.api import AnotherMeEngine, EngineConfig, StreamingEngine
+    from repro.data import synthetic_setup
+
+    batch, forest = synthetic_setup(
+        N, num_types=30, classes_per_type=10, num_places=1000, seed=seed
+    )
+    cfg = EngineConfig(backend=backend, rho=rho,
+                       community_mode="components")
+    pieces, ends = _pieces(batch, updates)
+
+    stream = StreamingEngine(forest, cfg, world_capacity=N)
+    s_walls, examined, full = [], [], []
+    for piece in pieces:
+        t0 = time.perf_counter()
+        res = stream.update(piece)
+        s_walls.append(time.perf_counter() - t0)
+        examined.append(int(res.stats["pairs_examined"]))
+        full.append(int(res.stats["full_world_pairs"]))
+
+    engine = AnotherMeEngine(forest, cfg)
+    o_walls = []
+    for end in ends:
+        prefix = _prefix(batch, int(end))
+        t0 = time.perf_counter()
+        engine.run(prefix)
+        o_walls.append(time.perf_counter() - t0)
+
+    def summary(walls):
+        return {
+            "update_wall_s": [round(w, 6) for w in walls],
+            "updates_per_sec": round(len(walls) / sum(walls), 3),
+            "mean_update_s": round(float(np.mean(walls)), 6),
+        }
+
+    s = summary(s_walls)
+    s.update({
+        "p50_update_s": round(float(np.median(s_walls)), 6),
+        "max_update_s": round(float(np.max(s_walls)), 6),
+        "pairs_examined": examined,
+        "full_world_pairs": full,
+        # steady state (every update past the first): the incremental index
+        # must examine strictly fewer pairs than a full-world re-join
+        "delta_only": all(
+            e < f for e, f in zip(examined[1:], full[1:]) if f
+        ) and sum(examined) == full[-1],
+    })
+    o = summary(o_walls)
+    return {
+        "N": N, "updates": updates, "batch": N // updates,
+        "backend": backend,
+        "stream": s, "oneshot": o,
+        "stream_vs_oneshot": round(
+            o["mean_update_s"] / max(s["mean_update_s"], 1e-9), 3
+        ),
+    }
+
+
+def _grid(smoke, full):
+    if smoke:
+        return [(128, 4), (256, 8)]
+    grid = [(512, 8), (1024, 16)]
+    if full:
+        grid += [(4096, 32), (16384, 64)]
+    return grid
+
+
+def bench(*, smoke=False, full=False, out_path=None):
+    grids = [bench_cell(N, u) for N, u in _grid(smoke, full)]
+    report = {
+        "schema": "bench_stream/v1",
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "smoke": bool(smoke),
+        "grids": grids,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+def run(full: bool = False, smoke: bool | None = None):
+    """benchmarks/run.py entry point: CSV rows + BENCH_stream.json."""
+    from benchmarks.common import Row
+
+    report = bench(smoke=(not full) if smoke is None else smoke, full=full,
+                   out_path=os.path.join(_REPO, "BENCH_stream.json"))
+    for cell in report["grids"]:
+        tag = f"N{cell['N']}_u{cell['updates']}"
+        yield Row(
+            f"bench_stream/stream/{tag}",
+            cell["stream"]["mean_update_s"] * 1e6,
+            f"{cell['stream']['updates_per_sec']:.1f} upd/s "
+            f"[delta_only={cell['stream']['delta_only']}]",
+        )
+        yield Row(
+            f"bench_stream/oneshot/{tag}",
+            cell["oneshot"]["mean_update_s"] * 1e6,
+            f"{cell['oneshot']['updates_per_sec']:.1f} upd/s "
+            f"[x{cell['stream_vs_oneshot']} vs stream]",
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grid (adds N=4096, 16384)")
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args()
+    report = bench(smoke=args.smoke, full=args.full, out_path=args.out)
+    print(f"# backend={report['backend']} jax={report['jax_version']}")
+    for cell in report["grids"]:
+        s, o = cell["stream"], cell["oneshot"]
+        print(f"N={cell['N']:<6d} updates={cell['updates']:<3d} "
+              f"stream {s['mean_update_s']*1e3:8.2f} ms/upd "
+              f"oneshot {o['mean_update_s']*1e3:8.2f} ms/upd "
+              f"ratio x{cell['stream_vs_oneshot']:<7} "
+              f"delta_only={s['delta_only']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

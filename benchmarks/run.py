@@ -6,11 +6,13 @@ Prints ``name,us_per_call,derived`` CSV.  Default sizes are CPU-quick;
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
 MODULES = [
     "bench_score",
+    "bench_stream",
     "fig7_processing_time",
     "fig8_pairs_compared",
     "fig9_hash_overhead",
@@ -26,6 +28,8 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grids (modules that support it)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module substrings")
     args = ap.parse_args()
@@ -37,7 +41,10 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
-            for row in mod.run(full=args.full):
+            kwargs = {"full": args.full}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            for row in mod.run(**kwargs):
                 print(row.csv(), flush=True)
         except Exception:
             failures += 1

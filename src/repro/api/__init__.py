@@ -9,6 +9,9 @@ Components (all replaceable independently):
 
   AnotherMeEngine / EngineConfig / ExecutionPlan   one entry point,
       single-device jit or shard_map selected by ExecutionPlan(n_shards=...)
+  StreamingEngine                                  micro-batch ingestion:
+      engine.update(batch) appends into a device-resident world and scores
+      only the delta pairs, with incremental community maintenance
   get_backend / register_backend / available_backends
       string-keyed candidate-backend registry ("ssh", "minhash", "brp", "udf")
   CandidateBackend / BackendContext                backend protocol
@@ -33,10 +36,13 @@ from repro.api.engine import (
 )
 from repro.api.instrumentation import Instrumentation
 from repro.api.sharded import (
-    DistributedPlan, gather_similar_pairs, make_distributed_anotherme,
-    make_sharded_pipeline, pad_to_shards, plan_capacities,
+    DistributedPlan, StreamShardPlan, gather_similar_pairs,
+    make_distributed_anotherme, make_sharded_pipeline,
+    make_streaming_score_pipeline, pad_to_shards, plan_capacities,
+    plan_stream_capacities,
 )
 from repro.api.stages import (
     LCS_IMPLS, CandidateStage, CommunitiesStage, EncodeStage, PipelineContext,
     ScoreStage, Stage, lcs_impl_fn, validate_lcs_impl,
 )
+from repro.api.streaming import StreamingEngine

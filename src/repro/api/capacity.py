@@ -36,6 +36,34 @@ class CapacityPlanner:
         want = max(int(expected_pairs * self.slack), 1)
         return 1 << max(self.floor_pow2, int(np.ceil(np.log2(want))))
 
+    def update_capacity(self, count: int, *, floor_pow2: int = 4) -> int:
+        """Power-of-two capacity for one streaming micro-batch's buffers.
+
+        Like :meth:`initial_capacity` but with a small floor: per-update
+        delta buffers (new rows to append, delta pairs to score) should cost
+        O(delta), not O(2**floor_pow2) of the world-sized policy — while
+        still quantizing to powers of two so consecutive updates of similar
+        size reuse every jit cache.
+        """
+        want = max(int(max(count, 1) * self.slack), 1)
+        return 1 << max(floor_pow2, int(np.ceil(np.log2(want))))
+
+    def grow_capacity(self, current: int, needed: int) -> int:
+        """Amortized-doubling growth plan for an append-only world buffer.
+
+        Returns ``current`` unchanged while it covers ``needed``; otherwise
+        the smallest power-of-two doubling of ``current`` that does.  Every
+        grow at least doubles, so N appended rows trigger O(log N)
+        reallocations (and O(log N) recompilations of the world-shaped
+        programs) with total copy cost O(N) — the classic dynamic-array
+        amortization, applied to device-resident buffers where each
+        reallocation also invalidates a jit cache entry.
+        """
+        cap = max(current, 1)
+        while cap < needed:
+            cap *= 2
+        return cap
+
     def run_with_retry(
         self, build: Callable[[int], CandidatePairs], capacity: int
     ) -> tuple[CandidatePairs, int]:

@@ -124,6 +124,54 @@ def _fit(x: jnp.ndarray, cap: int, pad_val) -> jnp.ndarray:
     return jnp.pad(x, padw, constant_values=pad_val)
 
 
+def _hop_gather_codes(
+    left, right, codes_local, *, owner_of, slot_of, n_shards, axis_name,
+    hop_cap, out_cap,
+):
+    """Two-hop pair/code shuffle shared by the one-shot and streaming paths.
+
+    Route pairs to owner(left), attach that shard's code rows, then to
+    owner(right), attach, and come to rest wherever owner(right) is (the
+    pairs are already globally deduped upstream).  Ownership is pluggable:
+    the one-shot pipeline owns rows in blocks (``g // local_n``), the
+    streaming world round-robins them (``g % n_shards``) so growth stays
+    balanced; ``slot_of`` maps a global id to the owner's local row.
+    Received rows sit scattered across per-source buckets, so valid rows are
+    compacted to the front before the fit to ``out_cap`` — a plain
+    truncation could drop valid pairs while keeping padding.  Returns
+    (left, right, left_codes, right_codes, overflow).
+    """
+    H, L = codes_local.shape[1], codes_local.shape[2]
+    local_n = codes_local.shape[0]
+    # hop 1: to owner(left)
+    (l1, r1), o1 = _route(
+        (left, right), owner_of(left), left != PAD_ID,
+        n_shards=n_shards, capacity=hop_cap, pads=(PAD_ID, PAD_ID),
+        axis_name=axis_name,
+    )
+    safe = slot_of(jnp.where(l1 == PAD_ID, 0, l1))
+    cl = codes_local[jnp.clip(safe, 0, local_n - 1)].reshape(
+        l1.shape[0], H * L
+    )
+    # hop 2: to owner(right), payload = left codes
+    (l2, r2, cl2), o2 = _route(
+        (l1, r1, cl), owner_of(r1), l1 != PAD_ID,
+        n_shards=n_shards, capacity=hop_cap,
+        pads=(PAD_ID, PAD_ID, 0), axis_name=axis_name,
+    )
+    safe_r = slot_of(jnp.where(r2 == PAD_ID, 0, r2))
+    cr = codes_local[jnp.clip(safe_r, 0, local_n - 1)]
+    cl_rows = cl2.reshape(l2.shape[0], H, L)
+    order = jnp.argsort(l2 == PAD_ID, stable=True)
+    l2, r2 = l2[order], r2[order]
+    cl_rows, cr = cl_rows[order], cr[order]
+    n_valid = jnp.sum(l2 != PAD_ID).astype(jnp.int32)
+    ovf_fit = jnp.maximum(n_valid - out_cap, 0)
+    return (_fit(l2, out_cap, PAD_ID), _fit(r2, out_cap, PAD_ID),
+            _fit(cl_rows, out_cap, 0), _fit(cr, out_cap, 0),
+            o1 + o2 + ovf_fit)
+
+
 @dataclasses.dataclass(frozen=True)
 class DistributedPlan:
     n_shards: int
@@ -480,48 +528,22 @@ def make_sharded_pipeline(
 
     def _gather_pair_codes(left, right, codes_local, gid0, plan, n, axis,
                            out_cap):
-        """Shuffle-mode scoring: route pairs to owner(left), attach that
-        shard's code rows, then to owner(right), attach, return to a
-        balanced layout (pairs stay wherever owner(right) is — dedup already
-        guaranteed global uniqueness).  Hop buckets are sized from the
-        exactly-planned per-owner loads (plan.owner_route_cap); without a
-        plan the uniform fallback applies and overflow counters catch skew.
-        ``out_cap`` is the resting buffer size — the post-prune capacity
-        when the pruning pass ran, else plan.scored_cap.
+        """Shuffle-mode scoring via the shared two-hop gather
+        (:func:`_hop_gather_codes`) with the one-shot BLOCK ownership:
+        row g lives on shard ``g // local_n`` at slot ``g - gid0``.  Hop
+        buckets are sized from the exactly-planned per-owner loads
+        (plan.owner_route_cap); without a plan the uniform fallback applies
+        and overflow counters catch skew.  ``out_cap`` is the resting
+        buffer size — the post-prune capacity when the pruning pass ran,
+        else plan.scored_cap.
         """
-        H, L = codes_local.shape[1], codes_local.shape[2]
         cap = plan.owner_route_cap or (out_cap // n + 64)
-        # hop 1: to owner(left)
-        (l1, r1), o1 = _route(
-            (left, right), left // plan.local_n, left != PAD_ID,
-            n_shards=n, capacity=cap, pads=(PAD_ID, PAD_ID),
-            axis_name=axis,
+        return _hop_gather_codes(
+            left, right, codes_local,
+            owner_of=lambda g: g // plan.local_n,
+            slot_of=lambda g: g - gid0,
+            n_shards=n, axis_name=axis, hop_cap=cap, out_cap=out_cap,
         )
-        safe = jnp.where(l1 == PAD_ID, 0, l1 - gid0)
-        cl = codes_local[jnp.clip(safe, 0, plan.local_n - 1)].reshape(
-            l1.shape[0], H * L
-        )
-        # hop 2: to owner(right), payload = left codes
-        (l2, r2, cl2), o2 = _route(
-            (l1, r1, cl), r1 // plan.local_n, l1 != PAD_ID,
-            n_shards=n, capacity=cap,
-            pads=(PAD_ID, PAD_ID, 0), axis_name=axis,
-        )
-        safe_r = jnp.where(r2 == PAD_ID, 0, r2 - gid0)
-        cr = codes_local[jnp.clip(safe_r, 0, plan.local_n - 1)]
-        cl_rows = cl2.reshape(l2.shape[0], H, L)
-        # compact valid rows to the front: received rows sit scattered
-        # across per-source buckets, so a plain truncation to scored_cap
-        # could drop valid pairs while keeping padding
-        order = jnp.argsort(l2 == PAD_ID, stable=True)
-        l2, r2 = l2[order], r2[order]
-        cl_rows, cr = cl_rows[order], cr[order]
-        n_valid = jnp.sum(l2 != PAD_ID).astype(jnp.int32)
-        ovf_fit = jnp.maximum(n_valid - out_cap, 0)
-        # pad/truncate to out_cap for a stable output shape
-        return (_fit(l2, out_cap, PAD_ID), _fit(r2, out_cap, PAD_ID),
-                _fit(cl_rows, out_cap, 0), _fit(cr, out_cap, 0),
-                o1 + o2 + ovf_fit)
 
     spec_in = (
         P(axis_name, None), P(axis_name, None), P(axis_name), P(None, None),
@@ -544,6 +566,213 @@ def make_sharded_pipeline(
             "mss": mss.reshape(n_shards, -1),
             "overflow": overflow.reshape(n_shards, -1),
             "pruned": pruned.reshape(n_shards),
+        }
+
+    return run
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamShardPlan:
+    """Static shapes of one streaming sharded score program.
+
+    The streaming world is laid out ROUND-ROBIN: global row g lives on
+    shard ``g % n_shards`` at local slot ``g // n_shards``, so appends keep
+    every shard within one row of balanced as the world grows (the one-shot
+    pipeline's block layout would pile every new row onto the last shard).
+    All capacities are powers of two so consecutive updates with similar
+    delta sizes hit the same compiled runner.
+    """
+
+    n_shards: int
+    cap_local: int   # physical world rows per shard (world cap / n_shards)
+    pair_cap: int    # delta pairs per shard (host-assigned input slices)
+    hop_cap: int     # rows per (src, dst) bucket in the owner hops (shuffle)
+    out_cap: int     # resting pairs per shard after the hops; in
+    #                  "replicate" mode pairs score in place: == pair_cap
+
+
+def _pow2(x: int, floor_pow2: int = 4) -> int:
+    return 1 << max(floor_pow2, int(np.ceil(np.log2(max(int(x), 1)))))
+
+
+def plan_stream_capacities(
+    lo: np.ndarray,
+    hi: np.ndarray,
+    n_shards: int,
+    cap_local: int,
+    *,
+    score_mode: str = "replicate",
+    floor_pow2: int = 4,
+) -> StreamShardPlan:
+    """Exact skew-aware capacity plan for ONE micro-batch's delta pairs.
+
+    The delta pairs are already deduped host-side (the bucket index emits
+    each pair once), so planning reduces to the score shuffle: pairs are
+    assigned to source shards in contiguous chunks, and for
+    ``score_mode="shuffle"`` the two owner hops are sized from the actual
+    per-(src, dst) loads under round-robin ownership (``owner = id %
+    n_shards``) — the same exact-loads discipline as
+    :func:`plan_capacities`, just over the delta instead of the world.
+    Capacities quantize to powers of two; the streaming engine keeps them
+    sticky (monotone max over updates) so steady-state updates reuse the
+    compiled runner.
+    """
+    p = int(lo.shape[0])
+    chunk = -(-p // n_shards) if p else 0  # ceil
+    pair_cap = _pow2(chunk, floor_pow2)
+    if score_mode == "replicate":
+        return StreamShardPlan(
+            n_shards=n_shards, cap_local=cap_local, pair_cap=pair_cap,
+            hop_cap=0, out_cap=pair_cap,
+        )
+    if p:
+        lo = np.asarray(lo, np.int64)
+        hi = np.asarray(hi, np.int64)
+        src = np.arange(p, dtype=np.int64) // max(chunk, 1)
+        own_lo = lo % n_shards
+        own_hi = hi % n_shards
+        h1 = np.zeros((n_shards, n_shards), np.int64)
+        np.add.at(h1, (src, own_lo), 1)
+        h2 = np.zeros((n_shards, n_shards), np.int64)
+        np.add.at(h2, (own_lo, own_hi), 1)
+        hop_need = int(max(h1.max(), h2.max()))
+        rest_need = int(np.bincount(own_hi, minlength=n_shards).max())
+    else:
+        hop_need = rest_need = 1
+    return StreamShardPlan(
+        n_shards=n_shards, cap_local=cap_local, pair_cap=pair_cap,
+        hop_cap=_pow2(hop_need, floor_pow2),
+        out_cap=_pow2(rest_need, floor_pow2),
+    )
+
+
+def make_streaming_score_pipeline(
+    mesh: jax.sharding.Mesh,
+    plan: StreamShardPlan,
+    *,
+    betas: jnp.ndarray,
+    axis_name: str = "ex",
+    score_mode: str = "replicate",
+    lcs_impl: str = "wavefront",
+    trace_counter: list | None = None,
+):
+    """Build the jitted shard_map DELTA score program for streaming updates.
+
+    Unlike :func:`make_sharded_pipeline` there is no join here: candidate
+    generation is incremental (the host bucket index emits only
+    new-vs-world pairs), so the device program just encodes each shard's
+    resident world rows in-mesh and scores the already-deduped delta pairs
+    through the selected ``lcs_impl``.
+
+    Call signature of the returned fn::
+
+      fn(places [n_shards * cap_local, L] int32,   # round-robin physical
+         left   [n_shards * pair_cap] int32,       # global ids, PAD_ID pad
+         right  [n_shards * pair_cap] int32,
+         tables [n_levels, num_places] int32)
+        -> dict: left/right [n, out_cap], level_lcs [n, out_cap, H],
+                 mss [n, out_cap], overflow [n]
+
+    Row lengths are reconstructed in-mesh from the encoding sentinels, so
+    the world state a shard holds is exactly its places slab — the code
+    table never materializes on the host, matching the one-shot invariant.
+
+    score_mode "replicate" all_gathers the per-shard encodings and scores
+    each pair slice in place (output slot == input slot); "shuffle" keeps
+    the table sharded and runs the shared two-hop owner gather
+    (:func:`_hop_gather_codes`) under round-robin ownership, with hop
+    buckets sized by :func:`plan_stream_capacities`.
+
+    ``trace_counter`` is a single-element list incremented at TRACE time
+    (the Python body runs only when XLA compiles a new program) — the
+    compilation-counting hook the no-recompile regression tests assert on.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.api.stages import FUSED_MODES, lcs_impl_fn
+
+    n_shards = plan.n_shards
+    fused_mode = FUSED_MODES.get(lcs_impl)
+    impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl)
+    out_cap = plan.out_cap
+
+    def _lengths_of(code_rows):
+        # lengths reconstructed from the padding sentinel in level 0
+        return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
+
+    def shard_fn(places, left, right, tables):
+        if trace_counter is not None:
+            trace_counter[0] += 1  # executes per compile, not per update
+        codes = encode_codes(places, tables)  # [cap_local, H, L]
+        if score_mode == "replicate":
+            codes_all = jax.lax.all_gather(codes, axis_name, axis=0,
+                                           tiled=True)
+            valid = left != PAD_ID
+            # physical index of global id g: (g % n) * cap_local + g // n
+            safe = jnp.where(valid, left, 0)
+            li = (safe % n_shards) * plan.cap_local + safe // n_shards
+            safe = jnp.where(valid, right, 0)
+            ri = (safe % n_shards) * plan.cap_local + safe // n_shards
+            if fused_mode is not None:
+                from repro.kernels.lcs.fused import fused_score
+
+                len_all = _lengths_of(codes_all)
+                level_lcs, mss = fused_score(
+                    codes_all, len_all, codes_all, len_all, li, ri, betas,
+                    mode=fused_mode,
+                )
+            else:
+                level_lcs = multi_level_lcs(
+                    codes_all[li], _lengths_of(codes_all[li]),
+                    codes_all[ri], _lengths_of(codes_all[ri]), impl=impl,
+                )
+                mss = mss_scores(level_lcs, betas)
+            out_l, out_r = left, right
+            ovf = jnp.zeros((), jnp.int32)
+        else:
+            out_l, out_r, codes_l, codes_r, ovf = _hop_gather_codes(
+                left, right, codes,
+                owner_of=lambda g: g % n_shards,
+                slot_of=lambda g: g // n_shards,
+                n_shards=n_shards, axis_name=axis_name,
+                hop_cap=plan.hop_cap, out_cap=out_cap,
+            )
+            if fused_mode is not None:
+                from repro.kernels.lcs.fused import fused_score
+
+                iota = jnp.arange(out_cap, dtype=jnp.int32)
+                level_lcs, mss = fused_score(
+                    codes_l, _lengths_of(codes_l),
+                    codes_r, _lengths_of(codes_r), iota, iota, betas,
+                    mode=fused_mode,
+                )
+            else:
+                level_lcs = multi_level_lcs(
+                    codes_l, _lengths_of(codes_l),
+                    codes_r, _lengths_of(codes_r), impl=impl,
+                )
+                mss = mss_scores(level_lcs, betas)
+        mss = jnp.where(out_l == PAD_ID, -1.0, mss)
+        return out_l, out_r, level_lcs, mss, ovf.reshape(1).astype(jnp.int32)
+
+    spec_in = (P(axis_name, None), P(axis_name), P(axis_name), P(None, None))
+    spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
+                P(axis_name))
+    fn = compat.shard_map(
+        shard_fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out
+    )
+
+    @jax.jit
+    def run(places, left, right, tables):
+        out_l, out_r, level_lcs, mss, overflow = fn(
+            places, left, right, tables
+        )
+        return {
+            "left": out_l.reshape(n_shards, -1),
+            "right": out_r.reshape(n_shards, -1),
+            "level_lcs": level_lcs.reshape(n_shards, out_cap, -1),
+            "mss": mss.reshape(n_shards, -1),
+            "overflow": overflow.reshape(n_shards),
         }
 
     return run

@@ -1,0 +1,538 @@
+"""`StreamingEngine`: micro-batch ingestion with incremental maintenance.
+
+    from repro.api import StreamingEngine, EngineConfig, ExecutionPlan
+
+    stream = StreamingEngine(forest, EngineConfig(backend="ssh", rho=2.0))
+    for micro_batch in feed:
+        result = stream.update(micro_batch)   # EngineResult, same type as
+                                              # AnotherMeEngine.run
+
+The one-shot engine re-encodes, re-joins, re-scores and re-clusters the
+full world on every call; the motivating workloads (friend recommendation
+over continuously collected LBS trajectories) are incremental, so this
+layer makes per-update cost proportional to the DELTA instead of the world:
+
+* world state is device-resident and append-only — the [N, H, L] code
+  table (single-device) or the round-robin sharded places slabs (sharded)
+  grow by amortized doubling (:meth:`CapacityPlanner.grow_capacity`), and
+  each update transfers only the new rows;
+* candidate generation is incremental: every backend's join keys are a
+  pure per-row function, so a :class:`~repro.core.stream_index.BucketIndex`
+  inserts the new rows' keys and emits exactly the pairs whose LATER member
+  arrived in this update (new-vs-(old ∪ new) bucket collisions) — the
+  union over updates equals the one-shot join over the concatenated batch;
+* scoring runs the existing ``lcs_impl`` dispatch over the delta pairs
+  only (``score_prune`` prunes the delta first), against the resident
+  world table;
+* communities are maintained incrementally: surviving edges fold into a
+  host :class:`~repro.core.communities.UnionFind` (the exact oracle path)
+  or into a resumable jit ``connected_components`` seeded with the
+  previous fixpoint via star edges ``(label[v], v)`` (the device path);
+  both yield the identical partition a one-shot run would produce.
+
+The streaming-vs-oneshot equivalence suite (tests/test_streaming.py and
+the streaming axis of tests/test_api_parity_matrix.py) pins all of this
+bit-exactly: for ANY split of a batch into micro-batches, the final scored
+edge set, per-pair MSS, and community partition match one ``engine.run``
+over the concatenation, on the single-device and sharded paths alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.engine import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.api.instrumentation import Instrumentation
+from repro.api.sharded import (
+    StreamShardPlan, make_streaming_score_pipeline, plan_stream_capacities,
+)
+from repro.api.stages import _KERNEL_MODES, _score_with_kernel
+from repro.core import communities as comm
+from repro.core.encoding import encode_codes, encode_types
+from repro.core.pipeline import AnotherMeResult as EngineResult
+from repro.core.similarity import (
+    PRUNE_EPS, mss_upper_bound, score_pairs, wavefront_dtype_from_env,
+)
+from repro.core.stream_index import BucketIndex
+from repro.core.types import (
+    EncodedBatch, PAD_ID, PAD_PLACE, ScoredPairs, TrajectoryBatch,
+)
+
+COMPONENTS_IMPLS = ("unionfind", "jit")
+
+
+class StreamingEngine:
+    """Incremental AnotherMe over a fixed semantic forest.
+
+    One instance owns the growing world state; :meth:`update` ingests one
+    micro-batch and returns the CURRENT world's :class:`EngineResult` —
+    accumulated scored pairs, the full similar set, and the maintained
+    communities — so the final update's result is directly comparable to
+    a one-shot ``AnotherMeEngine.run`` over the concatenated batches.
+
+    ``components_impl`` selects the community maintenance path used when
+    ``config.community_mode == "components"``: ``"unionfind"`` (host,
+    exact, amortized O(alpha) per edge) or ``"jit"`` (device min-label
+    propagation resumed from the previous labels).  ``"cliques"`` mode
+    re-runs the Bron-Kerbosch oracle over the accumulated edge set —
+    labels there are exact but not incremental (DESIGN.md discusses when
+    each is appropriate).
+    """
+
+    def __init__(
+        self,
+        forest,
+        config: EngineConfig = EngineConfig(),
+        plan: ExecutionPlan = ExecutionPlan(),
+        *,
+        components_impl: str = "unionfind",
+        world_capacity: int | None = None,
+    ):
+        if components_impl not in COMPONENTS_IMPLS:
+            raise ValueError(
+                f"unknown components_impl {components_impl!r}; valid: "
+                f"{list(COMPONENTS_IMPLS)}"
+            )
+        # the one-shot engine validates config/plan and owns the shared
+        # pieces: forest tables, betas, backend, planner, mesh
+        self._eng = AnotherMeEngine(forest, config, plan)
+        self.forest = forest
+        self.config = self._eng.config  # plan.lcs_impl already folded in
+        self.plan = plan
+        self.tables = self._eng.tables
+        self.betas = self._eng.betas
+        self.backend = self._eng.backend
+        self.backend_ctx = self._eng.backend_ctx
+        self.planner = self._eng.planner
+        self.components_impl = components_impl
+        H = int(self.tables.shape[0])
+        self._H = H
+        # world state (global-order host mirror + device-resident tables)
+        self.n = 0               # trajectories arrived
+        self.L = 1               # world max trajectory length (grows)
+        self._cap = 0            # world buffer capacity (amortized doubling)
+        self._cap_floor = max(16, int(world_capacity or 0))  # preallocation
+        #   hint: a caller expecting ~N trajectories passes world_capacity=N
+        #   so the world buffers never reallocate (and the world-shaped
+        #   programs never recompile) below that size
+        self._places_np = np.full((0, 1), PAD_PLACE, np.int32)
+        self._lengths_np = np.zeros((0,), np.int32)
+        self._codes_dev = None   # single-device resident [cap, H, L]
+        self._len_dev = None     # single-device resident [cap]
+        self._places_dev = None  # sharded resident round-robin [cap, L]
+        # incremental candidate index (one impl for every backend's keys)
+        self._index = BucketIndex()
+        # accumulated scored pairs (amortized-doubling host buffers)
+        self._acc_cap = 0
+        self._acc_n = 0
+        self._acc_left = np.empty((0,), np.int32)
+        self._acc_right = np.empty((0,), np.int32)
+        self._acc_lvl = np.empty((0, H), np.int32)
+        self._acc_mss = np.empty((0,), np.float32)
+        self._overflow = 0
+        # incremental communities
+        self.similar_pairs: set = set()
+        self._uf = comm.UnionFind()
+        self._labels = np.empty((0,), np.int32)  # jit path fixpoint
+        # compiled-program bookkeeping
+        self._runner_cache: dict = {}
+        self._stream_plan: StreamShardPlan | None = None
+        self.score_traces = [0]   # sharded runner trace counter (the
+        #                           no-per-update-recompile proof hook)
+        self.runner_builds = 0
+        self.updates = 0
+
+    # -- public entry points -------------------------------------------------
+
+    def update(self, batch: TrajectoryBatch) -> EngineResult:
+        """Ingest one micro-batch; return the current world's result."""
+        instr = Instrumentation()
+        places = np.asarray(batch.places, np.int32)
+        if places.ndim != 2:
+            places = places.reshape((places.shape[0], -1) if places.size
+                                    else (0, 1))
+        lengths = np.asarray(batch.lengths, np.int32).reshape(-1)
+        d = places.shape[0]
+        n_old = self.n
+        with instr.phase("ingest"):
+            if d:
+                self._ingest(places, lengths)
+        with instr.phase("keys"):
+            keys_np = self._new_row_keys(places, lengths) if d else None
+        with instr.phase("delta_join"):
+            if d:
+                lo, hi, examined = self._index.insert(keys_np,
+                                                      first_id=n_old)
+            else:
+                lo = hi = np.empty((0,), np.int32)
+                examined = 0
+        num_delta = int(lo.shape[0])
+        num_pruned = 0
+        if self.config.score_prune and num_delta:
+            with instr.phase("prune"):
+                lo, hi, num_pruned = self._prune_delta(lo, hi)
+        with instr.phase("score"):
+            if lo.shape[0]:
+                s_left, s_right, s_lvl, s_mss = self._score_delta(lo, hi)
+            else:
+                s_left = s_right = np.empty((0,), np.int32)
+                s_lvl = np.empty((0, self._H), np.int32)
+                s_mss = np.empty((0,), np.float32)
+            self._accumulate_scored(s_left, s_right, s_lvl, s_mss)
+        with instr.phase("communities"):
+            edge_mask = s_mss > np.float32(self.config.rho)
+            new_edges = list(zip(s_left[edge_mask].tolist(),
+                                 s_right[edge_mask].tolist()))
+            communities = self._fold_edges(new_edges)
+        self.updates += 1
+        instr.record(
+            num_new=d, world_size=self.n, world_capacity=self._cap,
+            pairs_examined=examined, full_world_pairs=self._index.full_join_size(),
+            num_delta_pairs=num_delta, num_candidates=self._acc_n,
+            num_similar=len(self.similar_pairs),
+            num_similar_new=len(new_edges),
+            num_communities=len(communities),
+            score_traces=self.score_traces[0],
+            runner_builds=self.runner_builds,
+            join_overflow=self._overflow,
+        )
+        if self.config.score_prune:
+            instr.record(num_pruned=num_pruned)
+        return EngineResult(
+            scored=self._scored(), similar_pairs=set(self.similar_pairs),
+            communities=communities, stats=instr.finalize(),
+        )
+
+    def update_many(self, batches) -> EngineResult:
+        """Ingest a sequence of micro-batches; return the final result."""
+        result = None
+        for batch in batches:
+            result = self.update(batch)
+        if result is None:
+            raise ValueError("update_many needs at least one micro-batch")
+        return result
+
+    @property
+    def world_size(self) -> int:
+        return self.n
+
+    # -- ingestion: world growth + device-resident appends -------------------
+
+    def _ingest(self, places: np.ndarray, lengths: np.ndarray) -> None:
+        d, Lb = places.shape
+        a_cap = self.planner.update_capacity(d)
+        new_L = max(self.L, Lb)
+        needed = self.n + d  # append slab padding rows are drop-scattered,
+        #                      so they never force a growth on their own
+        n_sh = self.plan.n_shards
+        new_cap = self.planner.grow_capacity(
+            max(self._cap, self._cap_floor), needed
+        )
+        if n_sh > 1:  # keep the round-robin slabs uniform
+            new_cap = n_sh * self.planner.grow_capacity(
+                1, -(-new_cap // n_sh)
+            )
+        rebuild = (new_L != self.L) or (new_cap != self._cap)
+        if rebuild:
+            grown = np.full((new_cap, new_L), PAD_PLACE, np.int32)
+            grown[: self.n, : self.L] = self._places_np[: self.n]
+            self._places_np = grown
+            glen = np.zeros((new_cap,), np.int32)
+            glen[: self.n] = self._lengths_np[: self.n]
+            self._lengths_np = glen
+            self.L, self._cap = new_L, new_cap
+        # host mirror append (global order); device branches below read
+        # self.n as the NEW world size and n0 as the first new row's id
+        n0 = self.n
+        self._places_np[n0 : n0 + d, :Lb] = places
+        self._places_np[n0 : n0 + d, Lb:] = PAD_PLACE
+        self._lengths_np[n0 : n0 + d] = lengths
+        self.n = n0 + d
+        # device-resident append: only the new rows transfer
+        pad_places = np.full((a_cap, self.L), PAD_PLACE, np.int32)
+        pad_places[:d, :Lb] = places
+        pad_lengths = np.zeros((a_cap,), np.int32)
+        pad_lengths[:d] = lengths
+        if n_sh == 1:
+            if rebuild or self._codes_dev is None:
+                self._codes_dev = encode_codes(
+                    jnp.asarray(self._places_np), self.tables
+                )
+                self._len_dev = jnp.asarray(self._lengths_np)
+            else:
+                idx = np.full((a_cap,), self._cap, np.int32)  # pads drop
+                idx[:d] = n0 + np.arange(d, dtype=np.int32)
+                self._codes_dev, self._len_dev = self._append_single(
+                    self._codes_dev, self._len_dev,
+                    jnp.asarray(pad_places), jnp.asarray(pad_lengths),
+                    jnp.asarray(idx),
+                )
+        else:
+            cl = self._cap // n_sh
+            if rebuild or self._places_dev is None:
+                phys = np.full((self._cap, self.L), PAD_PLACE, np.int32)
+                g = np.arange(self.n, dtype=np.int64)
+                phys[(g % n_sh) * cl + g // n_sh] = self._places_np[: self.n]
+                self._places_dev = jnp.asarray(phys)
+            else:
+                g = np.arange(n0, n0 + a_cap, dtype=np.int64)
+                idx = (g % n_sh) * cl + g // n_sh
+                idx[d:] = self._cap  # out of range -> dropped
+                self._places_dev = self._append_sharded(
+                    self._places_dev, jnp.asarray(pad_places),
+                    jnp.asarray(idx.astype(np.int32)),
+                )
+
+    def _append_single(self, codes_buf, len_buf, new_places, new_lengths,
+                       idx):
+        import jax
+
+        if not hasattr(self, "_append_single_jit"):
+            tables = self.tables
+
+            @jax.jit
+            def append(codes_buf, len_buf, new_places, new_lengths, idx):
+                new_codes = encode_codes(new_places, tables)
+                codes_buf = codes_buf.at[idx].set(new_codes, mode="drop")
+                len_buf = len_buf.at[idx].set(new_lengths, mode="drop")
+                return codes_buf, len_buf
+
+            self._append_single_jit = append
+        return self._append_single_jit(codes_buf, len_buf, new_places,
+                                       new_lengths, idx)
+
+    def _append_sharded(self, places_dev, new_places, idx):
+        import jax
+
+        if not hasattr(self, "_append_sharded_jit"):
+
+            @jax.jit
+            def append(places_dev, new_places, idx):
+                return places_dev.at[idx].set(new_places, mode="drop")
+
+            self._append_sharded_jit = append
+        return self._append_sharded_jit(places_dev, new_places, idx)
+
+    # -- incremental candidate generation ------------------------------------
+
+    def _new_row_keys(self, places: np.ndarray, lengths: np.ndarray):
+        """Join keys of the new rows only, from the coarsest-level view.
+
+        Every registered backend derives its keys from the type codes +
+        lengths (the sharded engine's planning contract), and a row's keys
+        are independent of the batch it arrives in — so keys computed once
+        at arrival stay valid for the lifetime of the index.
+        """
+        types = encode_types(jnp.asarray(places), self.tables)
+        view = EncodedBatch(codes=types[:, None, :],
+                            lengths=jnp.asarray(lengths))
+        mini = TrajectoryBatch(
+            places=jnp.asarray(places), lengths=jnp.asarray(lengths),
+            user_id=jnp.arange(places.shape[0], dtype=jnp.int32),
+        )
+        keys = self.backend.join_keys(view, mini, self.backend_ctx)
+        if keys is None:
+            raise ValueError(
+                f"candidate backend {self.backend.name!r} produces no join "
+                "keys; streaming ingestion requires a key-based backend"
+            )
+        return np.asarray(keys)
+
+    def _prune_delta(self, lo, hi):
+        """MSS upper-bound prune of the delta pairs (same f32 test as the
+        one-shot pass, so the surviving pair set is identical)."""
+        bsum = float(np.asarray(self.betas, np.float32).sum())
+        lens = self._lengths_np
+        ub = mss_upper_bound(lens[lo], lens[hi], bsum)
+        keep = ub > np.float32(self.config.rho - PRUNE_EPS)
+        return lo[keep], hi[keep], int(lo.shape[0] - keep.sum())
+
+    # -- delta scoring through the existing lcs_impl dispatch ----------------
+
+    def _score_delta(self, lo, hi):
+        if self.plan.n_shards == 1:
+            return self._score_delta_single(lo, hi)
+        return self._score_delta_sharded(lo, hi)
+
+    def _pad_pairs(self, lo, hi, cap):
+        left = np.full((cap,), PAD_ID, np.int32)
+        right = np.full((cap,), PAD_ID, np.int32)
+        left[: lo.shape[0]] = lo
+        right[: hi.shape[0]] = hi
+        return left, right
+
+    def _score_delta_single(self, lo, hi):
+        impl = self.config.lcs_impl
+        p_cap = self.planner.update_capacity(lo.shape[0])
+        left, right = self._pad_pairs(lo, hi, p_cap)
+        jl, jr = jnp.asarray(left), jnp.asarray(right)
+        if impl in _KERNEL_MODES:
+            from repro.core.types import CandidatePairs
+
+            enc = EncodedBatch(codes=self._codes_dev, lengths=self._len_dev)
+            cand = CandidatePairs(
+                left=jl, right=jr,
+                count=jnp.asarray(lo.shape[0], jnp.int32),
+                overflow=jnp.asarray(0, jnp.int32),
+            )
+            lvl, mss = _score_with_kernel(
+                enc, cand, self.betas, mode=_KERNEL_MODES[impl]
+            )
+        else:
+            lvl, mss = score_pairs(
+                self._codes_dev, self._len_dev, jl, jr, self.betas,
+                impl_name=impl, wavefront_dtype=wavefront_dtype_from_env(),
+            )
+        k = lo.shape[0]
+        return (left[:k], right[:k], np.asarray(lvl)[:k],
+                np.asarray(mss)[:k])
+
+    def _score_delta_sharded(self, lo, hi):
+        n_sh = self.plan.n_shards
+        cl = self._cap // n_sh
+        splan = plan_stream_capacities(
+            lo, hi, n_sh, cl, score_mode=self.plan.score_mode,
+        )
+        prev = self._stream_plan
+        if prev is not None and prev.cap_local == cl:
+            # sticky capacities: monotone max keeps the compiled runner hot
+            splan = StreamShardPlan(
+                n_shards=n_sh, cap_local=cl,
+                pair_cap=max(splan.pair_cap, prev.pair_cap),
+                hop_cap=max(splan.hop_cap, prev.hop_cap),
+                out_cap=max(splan.out_cap, prev.out_cap),
+            )
+            if self.plan.score_mode == "replicate":
+                splan = dataclasses.replace(splan, out_cap=splan.pair_cap)
+        for _ in range(self.planner.max_retries + 1):
+            out = self._run_stream_runner(splan, lo, hi)
+            if int(np.asarray(out["overflow"]).sum()) == 0:
+                break
+            splan = dataclasses.replace(
+                splan, hop_cap=max(splan.hop_cap, 1) * 2,
+                out_cap=splan.out_cap * 2,
+            )
+        self._stream_plan = splan
+        self._overflow += int(np.asarray(out["overflow"]).sum())
+        left = np.asarray(out["left"]).reshape(-1)
+        right = np.asarray(out["right"]).reshape(-1)
+        mss = np.asarray(out["mss"]).reshape(-1)
+        lvl = np.asarray(out["level_lcs"]).reshape(-1, self._H)
+        valid = left != PAD_ID
+        left, right = left[valid], right[valid]
+        lvl, mss = lvl[valid], mss[valid]
+        # canonical order: results come back in shuffle-resting order
+        order = np.lexsort((right, left))
+        return left[order], right[order], lvl[order], mss[order]
+
+    def _run_stream_runner(self, splan, lo, hi):
+        key = (splan, self.plan.score_mode, self.config.lcs_impl,
+               wavefront_dtype_from_env(), self.L, self._H)
+        runner = self._runner_cache.get(key)
+        if runner is None:
+            runner = make_streaming_score_pipeline(
+                self._eng.mesh(), splan, betas=self.betas,
+                axis_name=self.plan.axis_name,
+                score_mode=self.plan.score_mode,
+                lcs_impl=self.config.lcs_impl,
+                trace_counter=self.score_traces,
+            )
+            self._runner_cache[key] = runner
+            self.runner_builds += 1
+        n_sh, p = splan.n_shards, int(lo.shape[0])
+        chunk = -(-p // n_sh) if p else 0
+        left = np.full((n_sh, splan.pair_cap), PAD_ID, np.int32)
+        right = np.full((n_sh, splan.pair_cap), PAD_ID, np.int32)
+        for s in range(n_sh):
+            sl = lo[s * chunk : (s + 1) * chunk]
+            left[s, : sl.shape[0]] = sl
+            sr = hi[s * chunk : (s + 1) * chunk]
+            right[s, : sr.shape[0]] = sr
+        return runner(
+            self._places_dev, jnp.asarray(left.reshape(-1)),
+            jnp.asarray(right.reshape(-1)), self.tables,
+        )
+
+    # -- accumulation + incremental communities ------------------------------
+
+    def _accumulate_scored(self, left, right, lvl, mss):
+        k = left.shape[0]
+        if self._acc_n + k > self._acc_cap:
+            cap = self.planner.grow_capacity(
+                max(self._acc_cap, 16), self._acc_n + k
+            )
+            for name in ("_acc_left", "_acc_right", "_acc_lvl", "_acc_mss"):
+                old = getattr(self, name)
+                shape = (cap,) + old.shape[1:]
+                grown = np.full(shape, PAD_ID, old.dtype) \
+                    if old.dtype == np.int32 and old.ndim == 1 \
+                    else np.zeros(shape, old.dtype)
+                grown[: self._acc_n] = old[: self._acc_n]
+                setattr(self, name, grown)
+            self._acc_cap = cap
+        s = slice(self._acc_n, self._acc_n + k)
+        self._acc_left[s] = left
+        self._acc_right[s] = right
+        self._acc_lvl[s] = lvl
+        self._acc_mss[s] = mss
+        self._acc_n += k
+
+    def _scored(self) -> ScoredPairs:
+        n = self._acc_n
+        return ScoredPairs(
+            left=jnp.asarray(self._acc_left[:n]),
+            right=jnp.asarray(self._acc_right[:n]),
+            level_lcs=jnp.asarray(self._acc_lvl[:n]),
+            mss=jnp.asarray(self._acc_mss[:n]),
+            count=jnp.asarray(n, jnp.int32),
+            overflow=jnp.asarray(self._overflow, jnp.int32),
+        )
+
+    def _fold_edges(self, new_edges) -> set:
+        self.similar_pairs.update(
+            (int(a), int(b)) for a, b in new_edges
+        )
+        self._uf.add(self.n - self._uf.num_nodes)
+        for a, b in new_edges:
+            self._uf.union(int(a), int(b))
+        mode = self.config.community_mode
+        if mode == "cliques":
+            return comm.maximal_cliques(self.similar_pairs)
+        if mode != "components":
+            raise ValueError(
+                f"unknown community_mode {mode!r}; valid modes: "
+                "['cliques', 'components']"
+            )
+        if self.components_impl == "unionfind":
+            self._labels = self._uf.labels()
+            return comm.components_as_sets(self._labels)
+        return self._jit_components(new_edges)
+
+    def _jit_components(self, new_edges) -> set:
+        """Resumable min-label propagation: the previous fixpoint becomes
+        star edges ``(label[v], v)`` — each old component collapses to a
+        star — so only the DELTA edges (plus the stars) run through
+        :func:`connected_components`, seeded with the stale labels.  Shapes
+        are padded to the world capacity / a power-of-two edge cap so
+        steady-state updates reuse the compiled program.
+        """
+        if not self.n:
+            return set()
+        cap = self._cap
+        seed = np.arange(cap, dtype=np.int32)
+        seed[: self._labels.shape[0]] = self._labels
+        e_cap = self.planner.update_capacity(len(new_edges))
+        el = np.full((e_cap,), PAD_ID, np.int32)
+        er = np.full((e_cap,), PAD_ID, np.int32)
+        for i, (a, b) in enumerate(new_edges):
+            el[i], er[i] = a, b
+        left = np.concatenate([seed, el])
+        right = np.concatenate([np.arange(cap, dtype=np.int32), er])
+        labels = comm.connected_components(
+            jnp.asarray(left), jnp.asarray(right), num_nodes=cap,
+            init_labels=jnp.asarray(seed),
+        )
+        self._labels = np.asarray(labels)[: self.n]
+        return comm.components_as_sets(self._labels)

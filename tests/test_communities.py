@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core.communities import (
-    components_as_sets, connected_components, maximal_cliques, pairs_to_set,
-    qa1, qa2,
+    UnionFind, components_as_sets, connected_components, maximal_cliques,
+    pairs_to_set, qa1, qa2,
 )
 from repro.core.types import PAD_ID
 
@@ -47,6 +47,124 @@ def test_cc_matches_union_find(seed):
     )
     got = components_as_sets(np.asarray(labels))
     assert got == union_find_components(n, edges)
+
+
+def _edges_to_arrays(edges, cap=None):
+    cap = cap or max(len(edges), 1)
+    left = np.full(cap, PAD_ID, np.int32)
+    right = np.full(cap, PAD_ID, np.int32)
+    for i, (a, b) in enumerate(edges):
+        left[i], right[i] = a, b
+    return jnp.asarray(left), jnp.asarray(right)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_cc_warm_start_converges_to_cold_fixpoint(seed):
+    """Incremental warm start (ISSUE 4): seeding min-label propagation with
+    the stale fixpoint of any edge-prefix must converge to the exact same
+    labels as a cold start over the full edge list."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 30))
+    m = int(rng.integers(1, 50))
+    edges = [(int(a), int(b)) for a, b in rng.integers(0, n, size=(m, 2))
+             if a != b]
+    cut = int(rng.integers(0, len(edges) + 1))
+    l1, r1 = _edges_to_arrays(edges[:cut])
+    stale = connected_components(l1, r1, num_nodes=n)
+    l2, r2 = _edges_to_arrays(edges)
+    cold = connected_components(l2, r2, num_nodes=n)
+    warm = connected_components(l2, r2, num_nodes=n, init_labels=stale)
+    np.testing.assert_array_equal(np.asarray(warm), np.asarray(cold))
+
+
+def test_cc_warm_start_pad_only_and_zero_edge_update():
+    """PAD_ID-only edge lists and a zero-edge update: the stale labels ARE
+    the fixpoint and must come back unchanged."""
+    n = 7
+    l0, r0 = _edges_to_arrays([(0, 3), (4, 5)])
+    stale = connected_components(l0, r0, num_nodes=n)
+    pad_l, pad_r = _edges_to_arrays([], cap=4)  # all PAD_ID
+    again = connected_components(pad_l, pad_r, num_nodes=n,
+                                 init_labels=stale)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(stale))
+    # cold PAD-only with a warm seed of arange stays identity
+    iden = connected_components(pad_l, pad_r, num_nodes=n,
+                                init_labels=jnp.arange(n, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(iden), np.arange(n))
+
+
+def test_cc_warm_start_bridge_merges_components():
+    """A bridge edge arriving later must merge two previously disjoint
+    components under the warm start, via the star edges of the stale
+    labels (the streaming engine always feeds (label[v], v) stars)."""
+    n = 6
+    l0, r0 = _edges_to_arrays([(0, 1), (1, 2), (3, 4), (4, 5)])
+    stale = np.asarray(connected_components(l0, r0, num_nodes=n))
+    assert components_as_sets(stale) == {frozenset({0, 1, 2}),
+                                         frozenset({3, 4, 5})}
+    # streaming-style update: stars of the stale fixpoint + the bridge
+    stars = [(int(stale[v]), v) for v in range(n)]
+    l1, r1 = _edges_to_arrays(stars + [(2, 3)])
+    warm = connected_components(l1, r1, num_nodes=n,
+                                init_labels=jnp.asarray(stale))
+    assert components_as_sets(np.asarray(warm)) == {
+        frozenset(range(6))
+    }
+    np.testing.assert_array_equal(np.asarray(warm), np.zeros(n, np.int32))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_union_find_matches_connected_components(seed):
+    """The host union-find oracle (path compression + union by size) must
+    produce the identical canonical labeling as the jit min-label
+    propagation, for edges arriving in any micro-batch order."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 40))
+    m = int(rng.integers(0, 70))
+    edges = [(int(a), int(b)) for a, b in rng.integers(0, n, size=(m, 2))
+             if a != b]
+    # nodes arrive in random increments (streaming-style); an edge is
+    # unioned as soon as both endpoints exist
+    uf = UnionFind()
+    pending = [edges[i] for i in rng.permutation(len(edges))]
+    while uf.num_nodes < n:
+        uf.add(int(rng.integers(1, n - uf.num_nodes + 1)))
+        ready = [e for e in pending if max(e) < uf.num_nodes]
+        pending = [e for e in pending if max(e) >= uf.num_nodes]
+        for a, b in ready:
+            uf.union(a, b)
+    assert not pending
+    l, r = _edges_to_arrays(edges, cap=max(len(edges), 1))
+    want = np.asarray(connected_components(l, r, num_nodes=n))
+    np.testing.assert_array_equal(uf.labels(), want)
+    assert uf.components() == components_as_sets(want)
+
+
+def test_union_find_matches_bron_kerbosch_pair_membership():
+    """QA2 unchanged: every Bron-Kerbosch-side similar pair keeps both
+    endpoints in one union-find component (the components are exactly the
+    unions of overlapping cliques), so the recovered pair set is 100%."""
+    rng = np.random.default_rng(0)
+    n = 24
+    edges = {(int(a), int(b)) if a < b else (int(b), int(a))
+             for a, b in rng.integers(0, n, size=(60, 2)) if a != b}
+    uf = UnionFind(n)
+    for a, b in edges:
+        uf.union(a, b)
+    labels = uf.labels()
+    cliques = maximal_cliques(edges)
+    # each maximal clique sits inside exactly one component
+    for clique in cliques:
+        assert len({int(labels[v]) for v in clique}) == 1
+    # pair membership via the component labeling recovers every similar
+    # pair: QA2 == 1.0 exactly
+    pairs_in_components = {(a, b) for a, b in edges
+                           if labels[a] == labels[b]}
+    assert qa2(pairs_in_components, edges) == 1.0
+    # and the clique vertex set partitions into the components
+    covered = {v for c in cliques for v in c}
+    comp_members = {v for c in uf.components() for v in c}
+    assert covered == comp_members
 
 
 def test_maximal_cliques_triangle_plus_edge():
