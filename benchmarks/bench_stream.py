@@ -12,8 +12,13 @@ What the numbers mean (CPU smoke runs document the harness; the shape of
 the win — delta-proportional vs world-proportional updates — is backend
 independent):
 
-  stream        StreamingEngine.update per micro-batch: incremental bucket
-                probes + delta-only scoring against the resident table
+  stream        StreamingEngine.update with delta_join="host": incremental
+                bucket probes on the DRIVER + delta-only scoring against
+                the resident table (the pair list ships host->device)
+  stream_device StreamingEngine.update with delta_join="device": the
+                bucket state is key-sharded into device-resident slabs
+                and the delta join runs in-mesh — only the new rows' key
+                occurrences cross the host->device boundary
   oneshot       AnotherMeEngine.run over the full prefix, per micro-batch
                 (re-encode, re-join, re-score, re-cluster the world)
 
@@ -23,10 +28,19 @@ collisions probed by the incremental index) against ``full_world_pairs``
 the acceptance bound requires examined < full for every steady-state
 update, and the per-update counts sum exactly to the final full join.
 
-JSON schema (``schema: bench_stream/v1``)::
+Driver-transfer evidence compares the two delta-join paths per update:
+``driver_bytes_in`` (bytes that crossed host->device through the
+ingest + join + score input path), ``driver_pair_rows`` (candidate-pair
+rows shipped by the driver — 0 on the device path, where the pair list
+never materializes on the host), ``driver_key_rows`` (delta key
+occurrences shipped into the in-mesh join — nonzero only on the device
+path) and ``host_index_entries`` (world-key state resident on the
+driver's ``BucketIndex`` — nonzero only on the host path).
+
+JSON schema (``schema: bench_stream/v2``)::
 
     {
-      "schema": "bench_stream/v1",
+      "schema": "bench_stream/v2",
       "backend": "cpu" | "tpu" | ...,
       "jax_version": "...",
       "smoke": bool,
@@ -36,10 +50,17 @@ JSON schema (``schema: bench_stream/v1``)::
                     "mean_update_s": float, "p50_update_s": float,
                     "max_update_s": float,
                     "pairs_examined": [...], "full_world_pairs": [...],
-                    "delta_only": bool},
+                    "delta_only": bool, "delta_join": "host",
+                    "driver_bytes_in": [...], "driver_pair_rows": [...],
+                    "driver_key_rows": [...],
+                    "host_index_entries": int,
+                    "mean_driver_bytes_in": float},
+         "stream_device": {... same fields, "delta_join": "device" ...},
          "oneshot": {"update_wall_s": [...], "updates_per_sec": float,
                      "mean_update_s": float},
-         "stream_vs_oneshot": float}, ...
+         "stream_vs_oneshot": float,
+         "device_vs_host": float,          # host / device mean update s
+         "device_driver_bytes_vs_host": float}, ...
       ]
     }
 """
@@ -88,10 +109,54 @@ def _prefix(batch, end):
     )
 
 
+def _stream_run(forest, cfg, pieces, N, delta_join):
+    """Stream one world through a StreamingEngine; return the summary."""
+    from repro.api import ExecutionPlan, StreamingEngine
+
+    stream = StreamingEngine(
+        forest, cfg, ExecutionPlan(delta_join=delta_join),
+        world_capacity=N, join_slab_capacity=16 * N,
+    )
+    walls, examined, full = [], [], []
+    bytes_in, pair_rows, key_rows = [], [], []
+    for piece in pieces:
+        t0 = time.perf_counter()
+        res = stream.update(piece)
+        walls.append(time.perf_counter() - t0)
+        examined.append(int(res.stats["pairs_examined"]))
+        full.append(int(res.stats["full_world_pairs"]))
+        bytes_in.append(int(res.stats["driver_bytes_in"]))
+        pair_rows.append(int(res.stats["driver_pair_rows"]))
+        key_rows.append(int(res.stats["driver_key_rows"]))
+    s = {
+        "update_wall_s": [round(w, 6) for w in walls],
+        "updates_per_sec": round(len(walls) / sum(walls), 3),
+        "mean_update_s": round(float(np.mean(walls)), 6),
+        "p50_update_s": round(float(np.median(walls)), 6),
+        "max_update_s": round(float(np.max(walls)), 6),
+        "pairs_examined": examined,
+        "full_world_pairs": full,
+        # steady state (every update past the first): the incremental index
+        # must examine strictly fewer pairs than a full-world re-join
+        "delta_only": all(
+            e < f for e, f in zip(examined[1:], full[1:]) if f
+        ) and sum(examined) == full[-1],
+        "delta_join": delta_join,
+        "driver_bytes_in": bytes_in,
+        "driver_pair_rows": pair_rows,
+        "driver_key_rows": key_rows,
+        "host_index_entries": int(res.stats["host_index_entries"]),
+        "driver_mirror_keys": int(res.stats["driver_mirror_keys"]),
+        "mean_driver_bytes_in": round(float(np.mean(bytes_in)), 1),
+    }
+    return s
+
+
 def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
-    """One grid cell: stream the world in ``updates`` micro-batches and
-    re-run one-shot over every prefix; returns the cell report dict."""
-    from repro.api import AnotherMeEngine, EngineConfig, StreamingEngine
+    """One grid cell: stream the world in ``updates`` micro-batches over
+    BOTH delta-join paths and re-run one-shot over every prefix; returns
+    the cell report dict."""
+    from repro.api import AnotherMeEngine, EngineConfig
     from repro.data import synthetic_setup
 
     batch, forest = synthetic_setup(
@@ -101,14 +166,8 @@ def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
                        community_mode="components")
     pieces, ends = _pieces(batch, updates)
 
-    stream = StreamingEngine(forest, cfg, world_capacity=N)
-    s_walls, examined, full = [], [], []
-    for piece in pieces:
-        t0 = time.perf_counter()
-        res = stream.update(piece)
-        s_walls.append(time.perf_counter() - t0)
-        examined.append(int(res.stats["pairs_examined"]))
-        full.append(int(res.stats["full_world_pairs"]))
+    s = _stream_run(forest, cfg, pieces, N, "host")
+    dev = _stream_run(forest, cfg, pieces, N, "device")
 
     engine = AnotherMeEngine(forest, cfg)
     o_walls = []
@@ -117,33 +176,24 @@ def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
         t0 = time.perf_counter()
         engine.run(prefix)
         o_walls.append(time.perf_counter() - t0)
-
-    def summary(walls):
-        return {
-            "update_wall_s": [round(w, 6) for w in walls],
-            "updates_per_sec": round(len(walls) / sum(walls), 3),
-            "mean_update_s": round(float(np.mean(walls)), 6),
-        }
-
-    s = summary(s_walls)
-    s.update({
-        "p50_update_s": round(float(np.median(s_walls)), 6),
-        "max_update_s": round(float(np.max(s_walls)), 6),
-        "pairs_examined": examined,
-        "full_world_pairs": full,
-        # steady state (every update past the first): the incremental index
-        # must examine strictly fewer pairs than a full-world re-join
-        "delta_only": all(
-            e < f for e, f in zip(examined[1:], full[1:]) if f
-        ) and sum(examined) == full[-1],
-    })
-    o = summary(o_walls)
+    o = {
+        "update_wall_s": [round(w, 6) for w in o_walls],
+        "updates_per_sec": round(len(o_walls) / sum(o_walls), 3),
+        "mean_update_s": round(float(np.mean(o_walls)), 6),
+    }
     return {
         "N": N, "updates": updates, "batch": N // updates,
         "backend": backend,
-        "stream": s, "oneshot": o,
+        "stream": s, "stream_device": dev, "oneshot": o,
         "stream_vs_oneshot": round(
             o["mean_update_s"] / max(s["mean_update_s"], 1e-9), 3
+        ),
+        "device_vs_host": round(
+            s["mean_update_s"] / max(dev["mean_update_s"], 1e-9), 3
+        ),
+        "device_driver_bytes_vs_host": round(
+            dev["mean_driver_bytes_in"] / max(s["mean_driver_bytes_in"], 1.0),
+            3,
         ),
     }
 
@@ -160,7 +210,7 @@ def _grid(smoke, full):
 def bench(*, smoke=False, full=False, out_path=None):
     grids = [bench_cell(N, u) for N, u in _grid(smoke, full)]
     report = {
-        "schema": "bench_stream/v1",
+        "schema": "bench_stream/v2",
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "smoke": bool(smoke),
@@ -184,7 +234,16 @@ def run(full: bool = False, smoke: bool | None = None):
             f"bench_stream/stream/{tag}",
             cell["stream"]["mean_update_s"] * 1e6,
             f"{cell['stream']['updates_per_sec']:.1f} upd/s "
-            f"[delta_only={cell['stream']['delta_only']}]",
+            f"[delta_only={cell['stream']['delta_only']}] "
+            f"[{cell['stream']['mean_driver_bytes_in']:.0f} B/upd]",
+        )
+        yield Row(
+            f"bench_stream/stream_device/{tag}",
+            cell["stream_device"]["mean_update_s"] * 1e6,
+            f"{cell['stream_device']['updates_per_sec']:.1f} upd/s "
+            f"[pair_rows=0, "
+            f"{cell['stream_device']['mean_driver_bytes_in']:.0f} B/upd, "
+            f"x{cell['device_driver_bytes_vs_host']} bytes vs host]",
         )
         yield Row(
             f"bench_stream/oneshot/{tag}",
@@ -205,12 +264,15 @@ def main():
     report = bench(smoke=args.smoke, full=args.full, out_path=args.out)
     print(f"# backend={report['backend']} jax={report['jax_version']}")
     for cell in report["grids"]:
-        s, o = cell["stream"], cell["oneshot"]
+        s, d, o = cell["stream"], cell["stream_device"], cell["oneshot"]
         print(f"N={cell['N']:<6d} updates={cell['updates']:<3d} "
-              f"stream {s['mean_update_s']*1e3:8.2f} ms/upd "
+              f"host {s['mean_update_s']*1e3:8.2f} ms/upd "
+              f"({s['mean_driver_bytes_in']:9.0f} B) "
+              f"device {d['mean_update_s']*1e3:8.2f} ms/upd "
+              f"({d['mean_driver_bytes_in']:9.0f} B) "
               f"oneshot {o['mean_update_s']*1e3:8.2f} ms/upd "
-              f"ratio x{cell['stream_vs_oneshot']:<7} "
-              f"delta_only={s['delta_only']}")
+              f"x{cell['stream_vs_oneshot']:<7} "
+              f"delta_only={s['delta_only'] and d['delta_only']}")
     print(f"wrote {args.out}")
 
 

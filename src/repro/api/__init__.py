@@ -36,10 +36,11 @@ from repro.api.engine import (
 )
 from repro.api.instrumentation import Instrumentation
 from repro.api.sharded import (
-    DistributedPlan, StreamShardPlan, gather_similar_pairs,
+    DistributedPlan, StreamJoinPlan, StreamShardPlan, gather_similar_pairs,
     make_distributed_anotherme, make_sharded_pipeline,
-    make_streaming_score_pipeline, pad_to_shards, plan_capacities,
-    plan_stream_capacities,
+    make_streaming_join_pipeline, make_streaming_score_pipeline,
+    pad_to_shards, plan_capacities, plan_stream_capacities,
+    plan_stream_join, sticky_join_plan,
 )
 from repro.api.stages import (
     LCS_IMPLS, CandidateStage, CommunitiesStage, EncodeStage, PipelineContext,

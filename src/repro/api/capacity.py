@@ -113,3 +113,24 @@ class CapacityPlanner:
             score_mode=score_mode,
             lengths_np=lengths_np, prune_tau=prune_tau, betas_sum=betas_sum,
         )
+
+    def plan_stream_join(
+        self, keys_flat, n_shards: int, stats, *, floor_pow2: int = 4
+    ):
+        """Exact per-owner capacity plan for the in-mesh streaming delta
+        join (``delta_join="device"``).
+
+        Delegates to :func:`repro.api.sharded.plan_stream_join`: the
+        bucket-slab, key-route and probe buffers are sized from the exact
+        per-owner loads the :class:`~repro.core.device_index.StreamJoinStats`
+        count mirror derives under the device's own key hash, and the two
+        pair-stage buffers from the pre-dedup emission totals (a safe
+        bound on post-dedup skew).  Capacities quantize to powers of two;
+        the streaming engine keeps them sticky across updates so the
+        compiled join program is reused — zero steady-state recompiles.
+        """
+        from repro.api.sharded import plan_stream_join
+
+        return plan_stream_join(
+            keys_flat, n_shards, stats, floor_pow2=floor_pow2
+        )

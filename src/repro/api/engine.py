@@ -92,6 +92,14 @@ class ExecutionPlan:
     shard_slack: float = 1.3        # slack for the sharded capacity plan
     lcs_impl: str | None = None     # override EngineConfig.lcs_impl (both
     #                                 execution paths); None -> use config
+    delta_join: str = "host"        # streaming only: "host" keeps the
+    #                                 incremental bucket table on the driver
+    #                                 (core/stream_index.py — the oracle);
+    #                                 "device" key-shards it into resident
+    #                                 slabs and joins in-mesh, so neither
+    #                                 world keys nor the pair list transit
+    #                                 the driver (core/device_index.py);
+    #                                 ignored by AnotherMeEngine.run
 
 
 class AnotherMeEngine:

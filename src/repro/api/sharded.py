@@ -110,6 +110,18 @@ def _route(
     return tuple(outs), overflow
 
 
+def _prune_keep(len_l, len_r, betas, prune_tau, valid):
+    """The one float32 MSS upper-bound prune test.
+
+    Every prune site — the one-shot in-mesh pass, the streaming replicate
+    and shuffle branches, and (via the same ``mss_upper_bound`` +
+    ``PRUNE_EPS`` discipline) the host-side ``_prune_delta`` — must agree
+    bit-exactly on which pairs survive, so the bound is defined once.
+    """
+    ub = mss_upper_bound(len_l, len_r, jnp.sum(betas))
+    return valid & (ub > prune_tau - PRUNE_EPS)
+
+
 def _fit(x: jnp.ndarray, cap: int, pad_val) -> jnp.ndarray:
     """Pad or truncate the leading axis of ``x`` to exactly ``cap`` rows.
 
@@ -460,9 +472,8 @@ def make_sharded_pipeline(
             pl_valid = left != PAD_ID
             sl = jnp.where(pl_valid, left, 0)
             sr = jnp.where(pl_valid, right, 0)
-            ub = mss_upper_bound(lengths_all[sl], lengths_all[sr],
-                                 jnp.sum(betas))
-            keep = pl_valid & (ub > prune_tau - PRUNE_EPS)
+            keep = _prune_keep(lengths_all[sl], lengths_all[sr], betas,
+                               prune_tau, pl_valid)
             n_keep = jnp.sum(keep).astype(jnp.int32)
             n_pruned = jnp.sum(pl_valid).astype(jnp.int32) - n_keep
             order = jnp.argsort(jnp.logical_not(keep), stable=True)
@@ -646,6 +657,202 @@ def plan_stream_capacities(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamJoinPlan:
+    """Static shapes of one in-mesh streaming delta-join program.
+
+    The resident bucket state is key-sharded: every (key, row id)
+    occurrence lives on shard ``hash(key) % n_shards`` inside a sorted
+    slab of ``slab_cap`` slots (core/device_index.py).  Per update only
+    the NEW rows' key occurrences enter the mesh — ``key_in_cap`` per
+    source shard — are all_to_all'd to their owners (``key_route_cap``
+    per (src, dst) bucket), probed against the slab into the
+    ``nn_cap``/``no_cap`` pair buffers, pair-hash shuffled for global
+    dedup (``pair_route_cap``), and come to rest ``pair_cap`` per shard.
+    All capacities quantize to powers of two and the engine keeps them
+    sticky (monotone max), so steady-state updates reuse one compiled
+    program.
+    """
+
+    n_shards: int
+    slab_cap: int       # resident (key, row) occurrences per shard
+    key_in_cap: int     # incoming key occurrences per source shard
+    key_route_cap: int  # rows per (src, dst) bucket in the key route
+    nn_cap: int         # new-vs-new pair slots per owner shard
+    no_cap: int         # new-vs-old pair slots per owner shard
+    pair_route_cap: int  # rows per (src, dst) bucket in the dedup shuffle
+    pair_cap: int       # deduped resting delta pairs per shard
+
+
+def plan_stream_join(
+    keys_flat: np.ndarray,
+    n_shards: int,
+    stats,
+    *,
+    floor_pow2: int = 4,
+) -> StreamJoinPlan:
+    """Exact skew-aware capacity plan for ONE update's in-mesh delta join.
+
+    keys_flat: the new rows' per-row-deduped key occurrences (flat, row
+    order) — the only join data the driver touches.  ``stats`` is the
+    :class:`~repro.core.device_index.StreamJoinStats` count mirror; its
+    ``plan_update`` yields the exact per-owner new-vs-old / new-vs-new
+    emission counts and slab-entry deltas under the device's own int32
+    key hash, so the slab, probe and route buffers are sized from actual
+    per-owner loads, not uniform-hash bounds.  The two pair-stage caps the
+    driver cannot compute exactly without the pair list itself
+    (``pair_route_cap``, ``pair_cap``) use the per-owner / global
+    pre-dedup emission totals — safe upper bounds on any post-dedup skew,
+    so a steady-state overflow is impossible (the retry-doubling path
+    stays as a belt-and-braces check).
+    """
+    k = int(keys_flat.shape[0])
+    owners = _positive_hash_np(keys_flat) % n_shards if k else \
+        np.zeros((0,), np.int64)
+    nvo, nvn, ent = stats.plan_update(keys_flat, owners)
+    chunk = -(-k // n_shards) if k else 0
+    if k:
+        src = np.arange(k, dtype=np.int64) // max(chunk, 1)
+        load = np.zeros((n_shards, n_shards), np.int64)
+        np.add.at(load, (src, owners), 1)
+        route_need = int(load.max())
+    else:
+        route_need = 1
+    emit = nvo + nvn
+    return StreamJoinPlan(
+        n_shards=n_shards,
+        slab_cap=_pow2(int((stats.owner_entries + ent).max()), floor_pow2),
+        key_in_cap=_pow2(chunk, floor_pow2),
+        key_route_cap=_pow2(route_need, floor_pow2),
+        nn_cap=_pow2(int(nvn.max()), floor_pow2),
+        no_cap=_pow2(int(nvo.max()), floor_pow2),
+        pair_route_cap=_pow2(int(emit.max()), floor_pow2),
+        pair_cap=_pow2(int(emit.sum()), floor_pow2),
+    )
+
+
+def sticky_join_plan(
+    plan: StreamJoinPlan, prev: StreamJoinPlan | None
+) -> StreamJoinPlan:
+    """Monotone max over every capacity: consecutive updates with similar
+    delta shapes resolve to the SAME plan, so the compiled join runner is
+    reused verbatim (the zero-steady-state-recompile contract)."""
+    if prev is None:
+        return plan
+    return StreamJoinPlan(
+        n_shards=plan.n_shards,
+        slab_cap=max(plan.slab_cap, prev.slab_cap),
+        key_in_cap=max(plan.key_in_cap, prev.key_in_cap),
+        key_route_cap=max(plan.key_route_cap, prev.key_route_cap),
+        nn_cap=max(plan.nn_cap, prev.nn_cap),
+        no_cap=max(plan.no_cap, prev.no_cap),
+        pair_route_cap=max(plan.pair_route_cap, prev.pair_route_cap),
+        pair_cap=max(plan.pair_cap, prev.pair_cap),
+    )
+
+
+def make_streaming_join_pipeline(
+    mesh: jax.sharding.Mesh,
+    plan: StreamJoinPlan,
+    *,
+    axis_name: str = "ex",
+    trace_counter: list | None = None,
+):
+    """Build the jitted shard_map in-mesh delta-join program.
+
+    The device-side replacement for ``BucketIndex.insert``: bucket state
+    stays key-sharded and device-resident, the driver ships only the new
+    rows' key occurrences, and the deduped delta pairs come to rest
+    in-mesh (their device buffers feed the streaming score program
+    directly — the pair list never materializes on the host).
+
+    Call signature of the returned fn::
+
+      fn(slab_keys [n_shards * slab_cap] int32,   # resident sorted slabs
+         slab_rows [n_shards * slab_cap] int32,
+         keys      [n_shards * key_in_cap] int32,  # new occurrences,
+         rows      [n_shards * key_in_cap] int32)  # PAD-padded chunks
+        -> dict: slab_keys/slab_rows (merged — commit only on success),
+                 left/right [n_shards, pair_cap] deduped delta pairs,
+                 count [n_shards], examined [n_shards],
+                 overflow [n_shards, 4]
+
+    Stages per shard: (1) all_to_all the incoming occurrences to
+    ``hash(key) % n_shards`` through the shared :func:`_route` machinery;
+    (2) :func:`~repro.core.device_index.probe_pairs` against the resident
+    slab (new-vs-old + new-vs-new, exact ``examined`` accounting);
+    (3) pair-hash all_to_all + :func:`~repro.core.ssh.dedup_pairs` so
+    every delta pair rests on exactly one shard (cross-owner duplicates
+    from pairs sharing keys with different owners collapse here);
+    (4) :func:`~repro.core.device_index.merge_insert` folds the incoming
+    occurrences into the slab (functional: the caller commits the
+    returned slabs only when no overflow fired, so retries are safe).
+
+    ``trace_counter`` increments at TRACE time only — the compilation
+    counting hook the differential harness asserts on.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.device_index import merge_insert, probe_pairs
+
+    n_shards = plan.n_shards
+
+    def shard_fn(slab_k, slab_r, keys, rows):
+        if trace_counter is not None:
+            trace_counter[0] += 1  # executes per compile, not per update
+        valid = keys != PAD_KEY
+        dest = _positive_hash(keys) % n_shards
+        (rk, rr), o1 = _route(
+            (keys, rows), dest, valid,
+            n_shards=n_shards, capacity=plan.key_route_cap,
+            pads=(PAD_KEY, PAD_ID), axis_name=axis_name,
+        )
+        lo, hi, examined, o2 = probe_pairs(
+            slab_k, slab_r, rk, rr, nn_cap=plan.nn_cap, no_cap=plan.no_cap
+        )
+        pvalid = lo != PAD_ID
+        pdest = _pair_hash(lo, hi) % n_shards
+        (rlo, rhi), o3 = _route(
+            (lo, hi), pdest, pvalid,
+            n_shards=n_shards, capacity=plan.pair_route_cap,
+            pads=(PAD_ID, PAD_ID), axis_name=axis_name,
+        )
+        cand = dedup_pairs(rlo, rhi)
+        left = _fit(cand.left, plan.pair_cap, PAD_ID)
+        right = _fit(cand.right, plan.pair_cap, PAD_ID)
+        o4 = jnp.maximum(cand.count - plan.pair_cap, 0)
+        slab_k2, slab_r2, o5 = merge_insert(slab_k, slab_r, rk, rr)
+        count = jnp.minimum(cand.count, plan.pair_cap)
+        overflow = jnp.stack([o1 + o2, o3 + o4, o5,
+                              jnp.zeros((), jnp.int32)]).astype(jnp.int32)
+        return (slab_k2, slab_r2, left, right, count.reshape(1),
+                examined.reshape(1), overflow)
+
+    spec_in = (P(axis_name), P(axis_name), P(axis_name), P(axis_name))
+    spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
+                P(axis_name), P(axis_name), P(axis_name))
+    fn = compat.shard_map(
+        shard_fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out
+    )
+
+    @jax.jit
+    def run(slab_keys, slab_rows, keys, rows):
+        sk, sr, left, right, count, examined, overflow = fn(
+            slab_keys, slab_rows, keys, rows
+        )
+        return {
+            "slab_keys": sk,
+            "slab_rows": sr,
+            "left": left.reshape(n_shards, -1),
+            "right": right.reshape(n_shards, -1),
+            "count": count.reshape(n_shards),
+            "examined": examined.reshape(n_shards),
+            "overflow": overflow.reshape(n_shards, -1),
+        }
+
+    return run
+
+
 def make_streaming_score_pipeline(
     mesh: jax.sharding.Mesh,
     plan: StreamShardPlan,
@@ -655,6 +862,8 @@ def make_streaming_score_pipeline(
     score_mode: str = "replicate",
     lcs_impl: str = "wavefront",
     trace_counter: list | None = None,
+    score_prune: bool = False,
+    prune_tau: float = 0.0,
 ):
     """Build the jitted shard_map DELTA score program for streaming updates.
 
@@ -686,6 +895,17 @@ def make_streaming_score_pipeline(
     ``trace_counter`` is a single-element list incremented at TRACE time
     (the Python body runs only when XLA compiles a new program) — the
     compilation-counting hook the no-recompile regression tests assert on.
+
+    ``score_prune`` runs the MSS upper-bound pruning pass IN-MESH (the
+    host delta-join path prunes host-side before the pairs ship; the
+    device delta-join path never sees the pairs on the host, so pruning
+    happens here): lengths are reconstructed from the encoding sentinels,
+    the same float32 bound as the one-shot pass is tested against
+    ``prune_tau``, and hopeless pairs are masked to PAD — in "shuffle"
+    mode BEFORE the owner hops (only the [N] lengths vector is gathered,
+    and masked pairs are invalid to the router, so they never travel or
+    gather code rows).  The surviving scored set is bit-identical to
+    pruning host-side; the per-shard prune count returns as ``pruned``.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -700,19 +920,30 @@ def make_streaming_score_pipeline(
         # lengths reconstructed from the padding sentinel in level 0
         return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
 
+    def _phys(g, valid):
+        # physical index of global id g in the round-robin world layout:
+        # (g % n) * cap_local + g // n
+        safe = jnp.where(valid, g, 0)
+        return (safe % n_shards) * plan.cap_local + safe // n_shards
+
     def shard_fn(places, left, right, tables):
         if trace_counter is not None:
             trace_counter[0] += 1  # executes per compile, not per update
         codes = encode_codes(places, tables)  # [cap_local, H, L]
+        n_pruned = jnp.zeros((), jnp.int32)
         if score_mode == "replicate":
             codes_all = jax.lax.all_gather(codes, axis_name, axis=0,
                                            tiled=True)
             valid = left != PAD_ID
-            # physical index of global id g: (g % n) * cap_local + g // n
-            safe = jnp.where(valid, left, 0)
-            li = (safe % n_shards) * plan.cap_local + safe // n_shards
-            safe = jnp.where(valid, right, 0)
-            ri = (safe % n_shards) * plan.cap_local + safe // n_shards
+            li = _phys(left, valid)
+            ri = _phys(right, valid)
+            if score_prune:
+                len_all = _lengths_of(codes_all)
+                keep = _prune_keep(len_all[li], len_all[ri], betas,
+                                   prune_tau, valid)
+                n_pruned = (jnp.sum(valid) - jnp.sum(keep)).astype(jnp.int32)
+                left = jnp.where(keep, left, PAD_ID)
+                right = jnp.where(keep, right, PAD_ID)
             if fused_mode is not None:
                 from repro.kernels.lcs.fused import fused_score
 
@@ -730,6 +961,21 @@ def make_streaming_score_pipeline(
             out_l, out_r = left, right
             ovf = jnp.zeros((), jnp.int32)
         else:
+            if score_prune:
+                # prune BEFORE the owner hops (the one-shot discipline):
+                # only the [N] int32 lengths vector is gathered — never a
+                # code row — and pruned pairs, masked to PAD, are invalid
+                # to _route, so they never travel or gather codes
+                len_all = jax.lax.all_gather(
+                    _lengths_of(codes), axis_name, axis=0, tiled=True
+                )
+                valid = left != PAD_ID
+                keep = _prune_keep(len_all[_phys(left, valid)],
+                                   len_all[_phys(right, valid)],
+                                   betas, prune_tau, valid)
+                n_pruned = (jnp.sum(valid) - jnp.sum(keep)).astype(jnp.int32)
+                left = jnp.where(keep, left, PAD_ID)
+                right = jnp.where(keep, right, PAD_ID)
             out_l, out_r, codes_l, codes_r, ovf = _hop_gather_codes(
                 left, right, codes,
                 owner_of=lambda g: g % n_shards,
@@ -753,18 +999,19 @@ def make_streaming_score_pipeline(
                 )
                 mss = mss_scores(level_lcs, betas)
         mss = jnp.where(out_l == PAD_ID, -1.0, mss)
-        return out_l, out_r, level_lcs, mss, ovf.reshape(1).astype(jnp.int32)
+        return (out_l, out_r, level_lcs, mss,
+                ovf.reshape(1).astype(jnp.int32), n_pruned.reshape(1))
 
     spec_in = (P(axis_name, None), P(axis_name), P(axis_name), P(None, None))
     spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
-                P(axis_name))
+                P(axis_name), P(axis_name))
     fn = compat.shard_map(
         shard_fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out
     )
 
     @jax.jit
     def run(places, left, right, tables):
-        out_l, out_r, level_lcs, mss, overflow = fn(
+        out_l, out_r, level_lcs, mss, overflow, pruned = fn(
             places, left, right, tables
         )
         return {
@@ -773,6 +1020,7 @@ def make_streaming_score_pipeline(
             "level_lcs": level_lcs.reshape(n_shards, out_cap, -1),
             "mss": mss.reshape(n_shards, -1),
             "overflow": overflow.reshape(n_shards),
+            "pruned": pruned.reshape(n_shards),
         }
 
     return run

@@ -21,6 +21,16 @@ layer makes per-update cost proportional to the DELTA instead of the world:
   inserts the new rows' keys and emits exactly the pairs whose LATER member
   arrived in this update (new-vs-(old ∪ new) bucket collisions) — the
   union over updates equals the one-shot join over the concatenated batch;
+* with ``ExecutionPlan(delta_join="device")`` the bucket state itself
+  leaves the driver: it becomes key-sharded device-resident sorted slabs
+  (``core/device_index.py``), each update ships only the new rows' key
+  occurrences into a shard_map program that routes them to their owner
+  shard, probes/merges the resident slab, and emits the deduped delta
+  pairs in-mesh, feeding the score program directly — neither the world's
+  keys nor the pair list ever materializes on the driver (the per-update
+  ``driver_*`` stats account for every byte that does transfer).  The
+  host ``BucketIndex`` path (``delta_join="host"``, the default) is kept
+  as the oracle the differential harness pins the device join against;
 * scoring runs the existing ``lcs_impl`` dispatch over the delta pairs
   only (``score_prune`` prunes the delta first), against the resident
   world table;
@@ -46,10 +56,13 @@ import numpy as np
 from repro.api.engine import AnotherMeEngine, EngineConfig, ExecutionPlan
 from repro.api.instrumentation import Instrumentation
 from repro.api.sharded import (
-    StreamShardPlan, make_streaming_score_pipeline, plan_stream_capacities,
+    StreamShardPlan, _positive_hash_np, _pow2, make_streaming_join_pipeline,
+    make_streaming_score_pipeline, plan_stream_capacities, plan_stream_join,
+    sticky_join_plan,
 )
 from repro.api.stages import _KERNEL_MODES, _score_with_kernel
 from repro.core import communities as comm
+from repro.core.device_index import StreamJoinStats
 from repro.core.encoding import encode_codes, encode_types
 from repro.core.pipeline import AnotherMeResult as EngineResult
 from repro.core.similarity import (
@@ -57,10 +70,11 @@ from repro.core.similarity import (
 )
 from repro.core.stream_index import BucketIndex
 from repro.core.types import (
-    EncodedBatch, PAD_ID, PAD_PLACE, ScoredPairs, TrajectoryBatch,
+    EncodedBatch, PAD_ID, PAD_KEY, PAD_PLACE, ScoredPairs, TrajectoryBatch,
 )
 
 COMPONENTS_IMPLS = ("unionfind", "jit")
+DELTA_JOINS = ("host", "device")
 
 
 class StreamingEngine:
@@ -89,11 +103,17 @@ class StreamingEngine:
         *,
         components_impl: str = "unionfind",
         world_capacity: int | None = None,
+        join_slab_capacity: int | None = None,
     ):
         if components_impl not in COMPONENTS_IMPLS:
             raise ValueError(
                 f"unknown components_impl {components_impl!r}; valid: "
                 f"{list(COMPONENTS_IMPLS)}"
+            )
+        if plan.delta_join not in DELTA_JOINS:
+            raise ValueError(
+                f"unknown delta_join {plan.delta_join!r}; valid: "
+                f"{list(DELTA_JOINS)}"
             )
         # the one-shot engine validates config/plan and owns the shared
         # pieces: forest tables, betas, backend, planner, mesh
@@ -122,8 +142,30 @@ class StreamingEngine:
         self._codes_dev = None   # single-device resident [cap, H, L]
         self._len_dev = None     # single-device resident [cap]
         self._places_dev = None  # sharded resident round-robin [cap, L]
+        # delta-join routing: "host" probes the driver-resident BucketIndex
+        # (the oracle); "device" keeps the bucket state key-sharded in-mesh
+        # and the world lives in the sharded layout even at n_shards=1
+        self.delta_join = plan.delta_join
+        self._mesh_world = plan.n_shards > 1 or self.delta_join == "device"
         # incremental candidate index (one impl for every backend's keys)
         self._index = BucketIndex()
+        # device-resident key-sharded bucket slabs (delta_join="device")
+        self._slab_keys = None   # [n_shards * slab_cap] sorted, PAD at end
+        self._slab_rows = None   # aligned row ids
+        self._slab_cap = 0
+        self._join_stats = StreamJoinStats(plan.n_shards)
+        self._join_plan = None
+        self._slab_floor = int(join_slab_capacity or 0)  # presize hint: a
+        #   caller expecting ~E total resident key occurrences passes
+        #   join_slab_capacity=E so the slabs never regrow (and the join
+        #   program never recompiles) below that size, like world_capacity
+        self._examined_total = 0
+        self._join_runner_cache: dict = {}
+        self.join_traces = [0]   # join-program compile counter (the
+        #                          zero-steady-state-recompile proof hook)
+        # per-update driver transfer accounting (the harness asserts the
+        # device path ships no pair list and no world keys)
+        self._xfer = {"bytes_in": 0, "pair_rows": 0, "key_rows": 0}
         # accumulated scored pairs (amortized-doubling host buffers)
         self._acc_cap = 0
         self._acc_n = 0
@@ -149,6 +191,7 @@ class StreamingEngine:
     def update(self, batch: TrajectoryBatch) -> EngineResult:
         """Ingest one micro-batch; return the current world's result."""
         instr = Instrumentation()
+        self._xfer = {"bytes_in": 0, "pair_rows": 0, "key_rows": 0}
         places = np.asarray(batch.places, np.int32)
         if places.ndim != 2:
             places = places.reshape((places.shape[0], -1) if places.size
@@ -161,35 +204,53 @@ class StreamingEngine:
                 self._ingest(places, lengths)
         with instr.phase("keys"):
             keys_np = self._new_row_keys(places, lengths) if d else None
-        with instr.phase("delta_join"):
-            if d:
-                lo, hi, examined = self._index.insert(keys_np,
-                                                      first_id=n_old)
-            else:
-                lo = hi = np.empty((0,), np.int32)
-                examined = 0
-        num_delta = int(lo.shape[0])
         num_pruned = 0
-        if self.config.score_prune and num_delta:
-            with instr.phase("prune"):
-                lo, hi, num_pruned = self._prune_delta(lo, hi)
-        with instr.phase("score"):
-            if lo.shape[0]:
-                s_left, s_right, s_lvl, s_mss = self._score_delta(lo, hi)
-            else:
-                s_left = s_right = np.empty((0,), np.int32)
-                s_lvl = np.empty((0, self._H), np.int32)
-                s_mss = np.empty((0,), np.float32)
-            self._accumulate_scored(s_left, s_right, s_lvl, s_mss)
+        if self.delta_join == "device":
+            with instr.phase("delta_join"):
+                left_dev, right_dev, num_delta, examined = (
+                    self._device_delta_join(keys_np, n_old)
+                    if d else (None, None, 0, 0)
+                )
+            with instr.phase("score"):
+                if num_delta:
+                    (s_left, s_right, s_lvl, s_mss,
+                     num_pruned) = self._score_device_pairs(
+                        left_dev, right_dev)
+                else:
+                    s_left = s_right = np.empty((0,), np.int32)
+                    s_lvl = np.empty((0, self._H), np.int32)
+                    s_mss = np.empty((0,), np.float32)
+                self._accumulate_scored(s_left, s_right, s_lvl, s_mss)
+        else:
+            with instr.phase("delta_join"):
+                if d:
+                    lo, hi, examined = self._index.insert(keys_np,
+                                                          first_id=n_old)
+                else:
+                    lo = hi = np.empty((0,), np.int32)
+                    examined = 0
+            num_delta = int(lo.shape[0])
+            if self.config.score_prune and num_delta:
+                with instr.phase("prune"):
+                    lo, hi, num_pruned = self._prune_delta(lo, hi)
+            with instr.phase("score"):
+                if lo.shape[0]:
+                    s_left, s_right, s_lvl, s_mss = self._score_delta(lo, hi)
+                else:
+                    s_left = s_right = np.empty((0,), np.int32)
+                    s_lvl = np.empty((0, self._H), np.int32)
+                    s_mss = np.empty((0,), np.float32)
+                self._accumulate_scored(s_left, s_right, s_lvl, s_mss)
         with instr.phase("communities"):
             edge_mask = s_mss > np.float32(self.config.rho)
             new_edges = list(zip(s_left[edge_mask].tolist(),
                                  s_right[edge_mask].tolist()))
             communities = self._fold_edges(new_edges)
         self.updates += 1
+        self._examined_total += int(examined)
         instr.record(
             num_new=d, world_size=self.n, world_capacity=self._cap,
-            pairs_examined=examined, full_world_pairs=self._index.full_join_size(),
+            pairs_examined=examined, full_world_pairs=self._examined_total,
             num_delta_pairs=num_delta, num_candidates=self._acc_n,
             num_similar=len(self.similar_pairs),
             num_similar_new=len(new_edges),
@@ -197,6 +258,21 @@ class StreamingEngine:
             score_traces=self.score_traces[0],
             runner_builds=self.runner_builds,
             join_overflow=self._overflow,
+            # driver transfer accounting: what actually crossed the
+            # host->device boundary this update (the differential harness
+            # asserts the device join ships no pair list and holds no
+            # world-key state on the driver)
+            delta_join=self.delta_join,
+            driver_bytes_in=self._xfer["bytes_in"],
+            driver_pair_rows=self._xfer["pair_rows"],
+            driver_key_rows=self._xfer["key_rows"],
+            host_index_entries=self._index.num_keys_inserted,
+            # the device path's residual driver state: one COUNT per
+            # distinct key (planning statistics — row ids, and therefore
+            # pairs, are not reconstructible from it), vs the host
+            # index's one entry per (key, row) occurrence above
+            driver_mirror_keys=self._join_stats.num_keys,
+            join_traces=self.join_traces[0],
         )
         if self.config.score_prune:
             instr.record(num_pruned=num_pruned)
@@ -250,20 +326,28 @@ class StreamingEngine:
         self._places_np[n0 : n0 + d, Lb:] = PAD_PLACE
         self._lengths_np[n0 : n0 + d] = lengths
         self.n = n0 + d
-        # device-resident append: only the new rows transfer
+        # device-resident append: only the new rows transfer.  Each branch
+        # below counts exactly the arrays it converts to device buffers,
+        # so driver_bytes_in stays an exact transfer ledger
         pad_places = np.full((a_cap, self.L), PAD_PLACE, np.int32)
         pad_places[:d, :Lb] = places
         pad_lengths = np.zeros((a_cap,), np.int32)
         pad_lengths[:d] = lengths
-        if n_sh == 1:
+        if not self._mesh_world:
             if rebuild or self._codes_dev is None:
                 self._codes_dev = encode_codes(
                     jnp.asarray(self._places_np), self.tables
                 )
                 self._len_dev = jnp.asarray(self._lengths_np)
+                self._xfer["bytes_in"] += (
+                    self._places_np.nbytes + self._lengths_np.nbytes
+                )
             else:
                 idx = np.full((a_cap,), self._cap, np.int32)  # pads drop
                 idx[:d] = n0 + np.arange(d, dtype=np.int32)
+                self._xfer["bytes_in"] += (
+                    pad_places.nbytes + pad_lengths.nbytes + idx.nbytes
+                )
                 self._codes_dev, self._len_dev = self._append_single(
                     self._codes_dev, self._len_dev,
                     jnp.asarray(pad_places), jnp.asarray(pad_lengths),
@@ -276,13 +360,16 @@ class StreamingEngine:
                 g = np.arange(self.n, dtype=np.int64)
                 phys[(g % n_sh) * cl + g // n_sh] = self._places_np[: self.n]
                 self._places_dev = jnp.asarray(phys)
+                self._xfer["bytes_in"] += phys.nbytes
             else:
                 g = np.arange(n0, n0 + a_cap, dtype=np.int64)
                 idx = (g % n_sh) * cl + g // n_sh
                 idx[d:] = self._cap  # out of range -> dropped
+                idx = idx.astype(np.int32)
+                self._xfer["bytes_in"] += pad_places.nbytes + idx.nbytes
                 self._places_dev = self._append_sharded(
                     self._places_dev, jnp.asarray(pad_places),
-                    jnp.asarray(idx.astype(np.int32)),
+                    jnp.asarray(idx),
                 )
 
     def _append_single(self, codes_buf, len_buf, new_places, new_lengths,
@@ -352,7 +439,7 @@ class StreamingEngine:
     # -- delta scoring through the existing lcs_impl dispatch ----------------
 
     def _score_delta(self, lo, hi):
-        if self.plan.n_shards == 1:
+        if not self._mesh_world:
             return self._score_delta_single(lo, hi)
         return self._score_delta_sharded(lo, hi)
 
@@ -367,6 +454,10 @@ class StreamingEngine:
         impl = self.config.lcs_impl
         p_cap = self.planner.update_capacity(lo.shape[0])
         left, right = self._pad_pairs(lo, hi, p_cap)
+        # pair_rows counts the candidate pairs the driver ships (one per
+        # (lo, hi) row); bytes_in counts the padded buffers that transfer
+        self._xfer["pair_rows"] += int(lo.shape[0])
+        self._xfer["bytes_in"] += left.nbytes + right.nbytes
         jl, jr = jnp.asarray(left), jnp.asarray(right)
         if impl in _KERNEL_MODES:
             from repro.core.types import CandidatePairs
@@ -416,6 +507,9 @@ class StreamingEngine:
             )
         self._stream_plan = splan
         self._overflow += int(np.asarray(out["overflow"]).sum())
+        return self._collect_scored(out)
+
+    def _collect_scored(self, out):
         left = np.asarray(out["left"]).reshape(-1)
         right = np.asarray(out["right"]).reshape(-1)
         mss = np.asarray(out["mss"]).reshape(-1)
@@ -427,9 +521,12 @@ class StreamingEngine:
         order = np.lexsort((right, left))
         return left[order], right[order], lvl[order], mss[order]
 
-    def _run_stream_runner(self, splan, lo, hi):
+    def _score_runner(self, splan, *, score_prune: bool):
+        """One cached streaming score runner per (plan, mode, impl, dtype,
+        world shape, prune) — shared by the host-pair and device-pair
+        paths so their cache keys cannot drift apart."""
         key = (splan, self.plan.score_mode, self.config.lcs_impl,
-               wavefront_dtype_from_env(), self.L, self._H)
+               wavefront_dtype_from_env(), self.L, self._H, score_prune)
         runner = self._runner_cache.get(key)
         if runner is None:
             runner = make_streaming_score_pipeline(
@@ -438,9 +535,17 @@ class StreamingEngine:
                 score_mode=self.plan.score_mode,
                 lcs_impl=self.config.lcs_impl,
                 trace_counter=self.score_traces,
+                score_prune=score_prune,
+                prune_tau=self.config.rho,
             )
             self._runner_cache[key] = runner
             self.runner_builds += 1
+        return runner
+
+    def _run_stream_runner(self, splan, lo, hi):
+        # host path: pairs were already pruned host-side, so the score
+        # program never prunes
+        runner = self._score_runner(splan, score_prune=False)
         n_sh, p = splan.n_shards, int(lo.shape[0])
         chunk = -(-p // n_sh) if p else 0
         left = np.full((n_sh, splan.pair_cap), PAD_ID, np.int32)
@@ -450,10 +555,174 @@ class StreamingEngine:
             left[s, : sl.shape[0]] = sl
             sr = hi[s * chunk : (s + 1) * chunk]
             right[s, : sr.shape[0]] = sr
+        self._xfer["pair_rows"] += int(lo.shape[0])
+        self._xfer["bytes_in"] += left.nbytes + right.nbytes
         return runner(
             self._places_dev, jnp.asarray(left.reshape(-1)),
             jnp.asarray(right.reshape(-1)), self.tables,
         )
+
+    # -- in-mesh incremental delta join (delta_join="device") ----------------
+
+    def _device_delta_join(self, keys_np, n_old: int):
+        """Ship ONLY the new rows' key occurrences into the in-mesh join.
+
+        The resident bucket state (key-sharded sorted slabs) is probed and
+        merged on-device; the deduped delta pairs come to rest in-mesh as
+        ``[n_shards, pair_cap]`` buffers that feed the score program
+        directly.  Returns ``(left_dev, right_dev, num_delta, examined)``.
+
+        State is committed functionally: the join program RETURNS the
+        merged slabs, and the engine adopts them (and folds the update
+        into the planning-count mirror) only after a run with zero
+        overflow — so the overflow-retry loop replans and re-runs from
+        unchanged state.
+        """
+        keys_np = np.asarray(keys_np)
+        # per-row key SET (vectorized: sort each row, drop PAD and
+        # adjacent duplicates), matching BucketIndex.insert's defensive
+        # dedup, so the examined count stays the exact per-bucket C(n, 2)
+        # partition
+        ks = np.sort(keys_np, axis=1)
+        valid = ks != PAD_KEY
+        valid[:, 1:] &= ks[:, 1:] != ks[:, :-1]
+        row_idx, col_idx = np.nonzero(valid)
+        k_flat = ks[row_idx, col_idx].astype(np.int32)
+        r_flat = (n_old + row_idx).astype(np.int32)
+        if k_flat.size == 0:
+            return None, None, 0, 0
+        n_sh = self.plan.n_shards
+        jplan = sticky_join_plan(
+            self.planner.plan_stream_join(k_flat, n_sh, self._join_stats),
+            self._join_plan,
+        )
+        if self._slab_floor:
+            floor = _pow2(-(-self._slab_floor // n_sh))
+            if floor > jplan.slab_cap:
+                jplan = dataclasses.replace(jplan, slab_cap=floor)
+        out = None
+        for _ in range(self.planner.max_retries + 1):
+            self._ensure_slab(jplan.slab_cap)
+            chunk = -(-k_flat.shape[0] // n_sh)
+            in_k = np.full((n_sh, jplan.key_in_cap), PAD_KEY, np.int32)
+            in_r = np.full((n_sh, jplan.key_in_cap), PAD_ID, np.int32)
+            for s in range(n_sh):
+                seg = slice(s * chunk, (s + 1) * chunk)
+                in_k[s, : k_flat[seg].shape[0]] = k_flat[seg]
+                in_r[s, : r_flat[seg].shape[0]] = r_flat[seg]
+            # key_rows counts the (key, row-id) occurrences the driver
+            # ships (one per valid tuple); bytes_in the padded buffers
+            self._xfer["key_rows"] += int(k_flat.shape[0])
+            self._xfer["bytes_in"] += in_k.nbytes + in_r.nbytes
+            out = self._join_runner(jplan)(
+                self._slab_keys, self._slab_rows,
+                jnp.asarray(in_k.reshape(-1)), jnp.asarray(in_r.reshape(-1)),
+            )
+            ovf = np.asarray(out["overflow"]).sum(axis=0)
+            if int(ovf.sum()) == 0:
+                break
+            # exact planning makes steady-state overflow impossible; this
+            # belt-and-braces path doubles whatever stage busted
+            jplan = dataclasses.replace(
+                jplan,
+                key_route_cap=jplan.key_route_cap * 2,
+                nn_cap=jplan.nn_cap * 2, no_cap=jplan.no_cap * 2,
+                pair_route_cap=jplan.pair_route_cap * 2,
+                pair_cap=jplan.pair_cap * 2,
+                slab_cap=jplan.slab_cap * (2 if int(ovf[2]) else 1),
+            )
+        if int(np.asarray(out["overflow"]).sum()):
+            # never adopt a slab whose merge dropped entries: committing it
+            # would silently lose every future pair involving the dropped
+            # rows.  Exact planning makes this unreachable; reaching it
+            # means the planning invariant broke, so fail loudly.
+            raise RuntimeError(
+                "in-mesh delta join still overflowed after "
+                f"{self.planner.max_retries} retries (per-shard overflow "
+                f"{np.asarray(out['overflow']).tolist()}); refusing to "
+                "commit a lossy bucket state"
+            )
+        self._slab_keys = out["slab_keys"]
+        self._slab_rows = out["slab_rows"]
+        self._join_stats.commit(k_flat, _positive_hash_np(k_flat) % n_sh)
+        self._join_plan = jplan
+        num_delta = int(np.asarray(out["count"]).sum())
+        examined = int(np.asarray(out["examined"]).sum())
+        return out["left"], out["right"], num_delta, examined
+
+    def _ensure_slab(self, slab_cap: int) -> None:
+        """Allocate or regrow the resident slabs to ``slab_cap`` per shard.
+
+        Regrowth pads each shard's segment at the END (valid entries stay
+        compacted at the front, PAD_KEY sorts last) entirely on-device —
+        the resident keys never round-trip through the host.
+        """
+        n_sh = self.plan.n_shards
+        if self._slab_keys is None:
+            self._slab_cap = slab_cap
+            self._slab_keys = jnp.full((n_sh * slab_cap,), PAD_KEY, jnp.int32)
+            self._slab_rows = jnp.full((n_sh * slab_cap,), PAD_ID, jnp.int32)
+        elif slab_cap > self._slab_cap:
+            pad = ((0, 0), (0, slab_cap - self._slab_cap))
+            k = self._slab_keys.reshape(n_sh, self._slab_cap)
+            r = self._slab_rows.reshape(n_sh, self._slab_cap)
+            self._slab_keys = jnp.pad(
+                k, pad, constant_values=PAD_KEY).reshape(-1)
+            self._slab_rows = jnp.pad(
+                r, pad, constant_values=PAD_ID).reshape(-1)
+            self._slab_cap = slab_cap
+
+    def _join_runner(self, jplan):
+        runner = self._join_runner_cache.get(jplan)
+        if runner is None:
+            runner = make_streaming_join_pipeline(
+                self._eng.mesh(), jplan, axis_name=self.plan.axis_name,
+                trace_counter=self.join_traces,
+            )
+            self._join_runner_cache[jplan] = runner
+            self.runner_builds += 1
+        return runner
+
+    def _score_device_pairs(self, left_dev, right_dev):
+        """Score the in-mesh delta pairs straight off their device buffers.
+
+        The pairs rest on their pair-hash shard; "replicate" scores them
+        in place against the all_gathered in-mesh encodings, "shuffle"
+        runs the shared owner hops.  ``score_prune`` is applied IN-MESH by
+        the score program (the pairs never visit the host to be pruned
+        there).  Capacities derive deterministically from the sticky join
+        plan, so they inherit its zero-steady-state-recompile property.
+        """
+        n_sh = self.plan.n_shards
+        pair_cap = int(left_dev.shape[-1])
+        splan = StreamShardPlan(
+            n_shards=n_sh, cap_local=self._cap // n_sh, pair_cap=pair_cap,
+            # pair_cap bounds the GLOBAL deduped pair count (it is the
+            # pow2 of the update's total pre-dedup emissions), so no hop
+            # bucket and no resting shard can ever see more than pair_cap
+            # valid rows — a safe static bound for both hop stages
+            hop_cap=pair_cap if self.plan.score_mode == "shuffle" else 0,
+            out_cap=pair_cap,
+        )
+        for _ in range(self.planner.max_retries + 1):
+            out = self._run_device_score(splan, left_dev, right_dev)
+            if int(np.asarray(out["overflow"]).sum()) == 0:
+                break
+            splan = dataclasses.replace(
+                splan, hop_cap=max(splan.hop_cap, 1) * 2,
+                out_cap=splan.out_cap * 2,
+            )
+        self._overflow += int(np.asarray(out["overflow"]).sum())
+        num_pruned = int(np.asarray(out["pruned"]).sum())
+        return (*self._collect_scored(out), num_pruned)
+
+    def _run_device_score(self, splan, left_dev, right_dev):
+        # device path: pruning (if configured) runs IN-MESH — the pairs
+        # are not on the host to be pruned there
+        runner = self._score_runner(splan,
+                                    score_prune=self.config.score_prune)
+        return runner(self._places_dev, left_dev.reshape(-1),
+                      right_dev.reshape(-1), self.tables)
 
     # -- accumulation + incremental communities ------------------------------
 

@@ -1,0 +1,284 @@
+"""Device-resident bucket state for the in-mesh incremental streaming join.
+
+The host :class:`~repro.core.stream_index.BucketIndex` keeps the whole
+key -> [row ids] join state on the driver, so every streaming update
+round-trips the world's buckets through host Python — the centralized wall
+the paper's distributed hash-join design exists to remove.  This module is
+the device-side replacement: the bucket table becomes a **key-sharded
+sorted slab** per shard —
+
+  * ``slab_keys`` int32 ``[cap]``: every (key, row) occurrence this shard
+    owns (``owner = hash(key) % n_shards``), sorted ascending by key with
+    ``PAD_KEY`` (= INT32_MAX) padding at the end, so one ``searchsorted``
+    finds any key's bucket as a contiguous run;
+  * ``slab_rows`` int32 ``[cap]``: the owning row id of each slot, aligned
+    with ``slab_keys`` (``PAD_ID`` in padding slots).
+
+Two pure, jittable kernels operate on one shard's slab (the shard_map
+program in ``api/sharded.py`` wraps them with the routing collectives):
+
+  :func:`probe_pairs`   enumerate this update's delta pairs — new-vs-old
+                        via a searchsorted range probe of the resident
+                        slab, new-vs-new via equal-key run ranks over the
+                        sorted incoming rows — into fixed-capacity buffers
+                        with exact pre-dedup ``examined`` accounting.
+  :func:`merge_insert`  sorted-merge the incoming (key, row) rows into the
+                        slab via two ``searchsorted`` position computations
+                        (a stable merge by key: old entries keep their
+                        order, new entries append after equal keys), with
+                        drop-mode overflow accounting — entries beyond the
+                        static capacity are counted, never silently lost,
+                        and the caller regrows + retries.
+
+Everything is int32 (jax x64 stays off); sorting uses ``lax.sort`` with
+two carry keys instead of packed 64-bit composites.  ``probe_pairs_ref``
+and ``merge_insert_ref`` are the numpy oracles the golden-shape tests pin
+the kernels against.
+
+The one host-side remnant is :class:`StreamJoinStats`: per-key occurrence
+COUNTS (never row ids — pairs cannot be reconstructed from it) so the
+driver can plan exact skew-aware slab and emitted-pair capacities, the
+same "driver learns partition statistics" discipline as
+``plan_capacities``.  The join state itself never transits the host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ssh import _runs
+from repro.core.types import PAD_ID, PAD_KEY
+
+
+def _enumerate_slots(excl: jnp.ndarray, counts: jnp.ndarray, cap: int):
+    """Invert slot -> (entry, offset) for run-length pair enumeration.
+
+    excl: non-decreasing exclusive prefix sum of ``counts``.  Slot ``p``
+    belongs to the last entry ``e`` with ``excl[e] <= p`` (entries with
+    zero count share their successor's prefix value and are never
+    selected for valid slots); offset ``t = p - excl[e]``.
+    """
+    n = excl.shape[0]
+    p = jnp.arange(cap, dtype=jnp.int32)
+    e = jnp.searchsorted(excl, p, side="right").astype(jnp.int32) - 1
+    e = jnp.clip(e, 0, n - 1)
+    t = p - excl[e]
+    total = excl[-1] + counts[-1]
+    return p, e, t, total
+
+
+def probe_pairs(
+    slab_keys: jnp.ndarray,
+    slab_rows: jnp.ndarray,
+    keys: jnp.ndarray,
+    rows: jnp.ndarray,
+    *,
+    nn_cap: int,
+    no_cap: int,
+):
+    """Delta pairs of one update's incoming (key, row) rows on one shard.
+
+    slab_keys/slab_rows: the resident sorted slab (PAD at the end).
+    keys/rows: int32 [R] incoming occurrences, PAD-padded anywhere (the
+        post-route buffer); sorted internally.
+    nn_cap/no_cap: static capacities of the new-vs-new / new-vs-old pair
+        buffers (planned exactly host-side; overflow counted, not dropped
+        silently — the caller retries with doubled buffers).
+
+    Returns ``(lo [nn_cap + no_cap], hi, examined, overflow)``: canonical
+    (lo < hi possibly unordered until min/max — we emit min/max) pre-dedup
+    delta pairs with PAD_ID in unused slots, the exact number of
+    collisions examined (new-vs-old + new-vs-new, the same per-bucket
+    partition quantity ``BucketIndex.insert`` reports), and the slots that
+    did not fit.
+    """
+    keys_s, rows_s = jax.lax.sort((keys, rows), num_keys=2)
+    valid = keys_s != PAD_KEY
+    # new-vs-new: rank within equal-key runs of the incoming rows — entry
+    # at in-run rank r pairs with the r earlier run members (C(m, 2) per
+    # key), exactly the in-batch collisions the host index examines
+    rank, _ = _runs(keys_s)
+    contrib = jnp.where(valid, rank, 0)
+    excl_nn = jnp.cumsum(contrib) - contrib
+    p, e, t, nn_total = _enumerate_slots(excl_nn, contrib, nn_cap)
+    partner = jnp.clip(e - rank[e] + t, 0, keys_s.shape[0] - 1)
+    ok = p < nn_total
+    nn_a = jnp.where(ok, rows_s[e], PAD_ID)
+    nn_b = jnp.where(ok, rows_s[partner], PAD_ID)
+    # new-vs-old: searchsorted range probe of the resident slab — valid
+    # slab entries sort before PAD_KEY, so [lo_idx, hi_idx) is exactly the
+    # resident bucket of each incoming key
+    lo_idx = jnp.searchsorted(slab_keys, keys_s, side="left").astype(jnp.int32)
+    hi_idx = jnp.searchsorted(slab_keys, keys_s, side="right").astype(jnp.int32)
+    counts = jnp.where(valid, hi_idx - lo_idx, 0)
+    excl_no = jnp.cumsum(counts) - counts
+    q, f, u, no_total = _enumerate_slots(excl_no, counts, no_cap)
+    sidx = jnp.clip(lo_idx[f] + u, 0, slab_keys.shape[0] - 1)
+    ok2 = q < no_total
+    no_a = jnp.where(ok2, slab_rows[sidx], PAD_ID)
+    no_b = jnp.where(ok2, rows_s[f], PAD_ID)
+    a = jnp.concatenate([nn_a, no_a])
+    b = jnp.concatenate([nn_b, no_b])
+    examined = (nn_total + no_total).astype(jnp.int32)
+    overflow = (
+        jnp.maximum(nn_total - nn_cap, 0) + jnp.maximum(no_total - no_cap, 0)
+    ).astype(jnp.int32)
+    return jnp.minimum(a, b), jnp.maximum(a, b), examined, overflow
+
+
+def merge_insert(
+    slab_keys: jnp.ndarray,
+    slab_rows: jnp.ndarray,
+    keys: jnp.ndarray,
+    rows: jnp.ndarray,
+):
+    """Sorted-merge the incoming (key, row) rows into the resident slab.
+
+    A stable merge by key via two ``searchsorted`` position computations:
+    old entry ``i`` lands at ``i + |new keys < key_i|``, new entry ``j``
+    (after an internal sort) at ``j + |old keys <= key_j|`` — old entries
+    keep their relative order and new entries append after equal keys
+    (streaming row ids only grow, so the slab stays sorted by (key, id)).
+    PAD_KEY sorts last on both sides, so valid entries compact to the
+    front and truncating to the static capacity drops padding first; any
+    dropped VALID entries are counted in ``overflow`` (the caller regrows
+    the slab and retries — the drop is never committed).
+
+    Returns ``(slab_keys', slab_rows', overflow)`` at the same capacity.
+    """
+    cap = slab_keys.shape[0]
+    keys_s, rows_s = jax.lax.sort((keys, rows), num_keys=2)
+    r = keys_s.shape[0]
+    pos_old = (
+        jnp.arange(cap, dtype=jnp.int32)
+        + jnp.searchsorted(keys_s, slab_keys, side="left").astype(jnp.int32)
+    )
+    pos_new = (
+        jnp.arange(r, dtype=jnp.int32)
+        + jnp.searchsorted(slab_keys, keys_s, side="right").astype(jnp.int32)
+    )
+    merged_k = (
+        jnp.full((cap + r,), PAD_KEY, jnp.int32)
+        .at[pos_old].set(slab_keys)
+        .at[pos_new].set(keys_s)
+    )
+    merged_r = (
+        jnp.full((cap + r,), PAD_ID, jnp.int32)
+        .at[pos_old].set(slab_rows)
+        .at[pos_new].set(rows_s)
+    )
+    entries = jnp.sum(slab_keys != PAD_KEY) + jnp.sum(keys_s != PAD_KEY)
+    overflow = jnp.maximum(entries - cap, 0).astype(jnp.int32)
+    return merged_k[:cap], merged_r[:cap], overflow
+
+
+# ---------------------------------------------------------------------------
+# numpy references (the golden-shape oracles)
+# ---------------------------------------------------------------------------
+def probe_pairs_ref(slab_keys, slab_rows, keys, rows):
+    """Bucket-semantics oracle for :func:`probe_pairs`: the pre-dedup
+    (lo, hi) multiset and the exact examined count, computed from plain
+    per-key dict buckets."""
+    slab_keys = np.asarray(slab_keys)
+    slab_rows = np.asarray(slab_rows)
+    buckets: dict[int, list[int]] = {}
+    for k, rid in zip(slab_keys.tolist(), slab_rows.tolist()):
+        if k != PAD_KEY:
+            buckets.setdefault(k, []).append(rid)
+    order = np.lexsort((np.asarray(rows), np.asarray(keys)))
+    pairs = []
+    examined = 0
+    seen: dict[int, list[int]] = {}
+    for i in order:
+        k, rid = int(np.asarray(keys)[i]), int(np.asarray(rows)[i])
+        if k == PAD_KEY:
+            continue
+        for m in buckets.get(k, []) + seen.get(k, []):
+            examined += 1
+            pairs.append((min(m, rid), max(m, rid)))
+        seen.setdefault(k, []).append(rid)
+    return pairs, examined
+
+
+def merge_insert_ref(slab_keys, slab_rows, keys, rows, cap):
+    """Stable-merge oracle for :func:`merge_insert`."""
+    entries = [
+        (int(k), int(r))
+        for k, r in zip(np.asarray(slab_keys), np.asarray(slab_rows))
+        if k != PAD_KEY
+    ]
+    new = sorted(
+        (int(k), int(r))
+        for k, r in zip(np.asarray(keys), np.asarray(rows))
+        if k != PAD_KEY
+    )
+    merged = sorted(entries + new, key=lambda kr: kr[0])
+    overflow = max(len(merged) - cap, 0)
+    merged = merged[:cap]
+    out_k = np.full((cap,), PAD_KEY, np.int32)
+    out_r = np.full((cap,), PAD_ID, np.int32)
+    for i, (k, r) in enumerate(merged):
+        out_k[i], out_r[i] = k, r
+    return out_k, out_r, overflow
+
+
+# ---------------------------------------------------------------------------
+# host-side planning statistics (counts only — never ids)
+# ---------------------------------------------------------------------------
+class StreamJoinStats:
+    """Per-key occurrence counts for exact device-join capacity planning.
+
+    The driver's only residual join state: ``counts[key]`` — how many rows
+    ever produced ``key`` — and the per-owner slab occupancy.  Row ids are
+    deliberately NOT kept (the pair set cannot be reconstructed from this
+    mirror; the bucket lists that grow unboundedly live on the devices).
+    ``plan_update`` computes, per owner shard, the exact pre-dedup
+    new-vs-old / new-vs-new emission counts and slab-entry deltas of one
+    update; ``commit`` folds the update in once the device run is
+    accepted, so overflow retries replan from unchanged statistics.
+    """
+
+    def __init__(self, n_shards: int):
+        self.n_shards = n_shards
+        self.counts: dict[int, int] = {}
+        self.owner_entries = np.zeros((n_shards,), np.int64)
+
+    def plan_update(self, keys_flat: np.ndarray, owners_flat: np.ndarray):
+        """Exact per-owner loads of inserting ``keys_flat`` (per-row-deduped
+        flat key occurrences, in row order) with precomputed owners.
+
+        Returns ``(new_vs_old, new_vs_new, entries_delta)``, each int64
+        ``[n_shards]``.
+        """
+        nvo = np.zeros((self.n_shards,), np.int64)
+        nvn = np.zeros((self.n_shards,), np.int64)
+        ent = np.zeros((self.n_shards,), np.int64)
+        if keys_flat.size == 0:
+            return nvo, nvn, ent
+        uniq, first = np.unique(keys_flat, return_index=True)
+        counts = np.bincount(
+            np.searchsorted(uniq, keys_flat), minlength=uniq.shape[0]
+        )
+        owners = owners_flat[first]
+        for k, m, o in zip(uniq.tolist(), counts.tolist(), owners.tolist()):
+            old = self.counts.get(k, 0)
+            nvo[o] += old * m
+            nvn[o] += m * (m - 1) // 2
+            ent[o] += m
+        return nvo, nvn, ent
+
+    def commit(self, keys_flat: np.ndarray, owners_flat: np.ndarray) -> None:
+        if keys_flat.size == 0:
+            return
+        uniq, first = np.unique(keys_flat, return_index=True)
+        counts = np.bincount(
+            np.searchsorted(uniq, keys_flat), minlength=uniq.shape[0]
+        )
+        for k, m in zip(uniq.tolist(), counts.tolist()):
+            self.counts[k] = self.counts.get(k, 0) + int(m)
+        np.add.at(self.owner_entries, owners_flat, 1)
+
+    @property
+    def num_keys(self) -> int:
+        return len(self.counts)

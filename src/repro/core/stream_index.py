@@ -23,16 +23,35 @@ re-run would enumerate.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.core.types import PAD_KEY
 
+# Bucket lists grow UNBOUNDEDLY for hot keys: a key shared by n rows holds
+# an n-entry list and its (n+1)-th arrival examines n collisions, so a
+# pathological single-key world costs O(n) driver memory and O(n^2) total
+# probe work.  The index stays exact regardless (the warning never changes
+# results) — crossing this many members per bucket just surfaces a
+# RuntimeWarning, once per key, pointing at the quadratic wall and at
+# ``delta_join="device"``, where the bucket state is sharded off the
+# driver.
+HOT_BUCKET_WARN = 10_000
+
 
 class BucketIndex:
-    """key -> [row ids] bucket table, grown one micro-batch at a time."""
+    """key -> [row ids] bucket table, grown one micro-batch at a time.
 
-    def __init__(self) -> None:
+    hot_bucket_warn: per-bucket member count past which a RuntimeWarning
+    fires (once per key); None disables the check.  Results are exact
+    either way — the cap warns, it never truncates.
+    """
+
+    def __init__(self, hot_bucket_warn: int | None = HOT_BUCKET_WARN) -> None:
         self._buckets: dict[int, list[int]] = {}
+        self.hot_bucket_warn = hot_bucket_warn
+        self._warned_keys: set[int] = set()
         self.num_rows = 0
         self.num_keys_inserted = 0
         self.pairs_examined_total = 0
@@ -93,6 +112,20 @@ class BucketIndex:
                         hi_out.append(rid)
                 if members[-1] != rid:  # keep each id once per bucket
                     members.append(rid)
+                    if (self.hot_bucket_warn is not None
+                            and len(members) == self.hot_bucket_warn
+                            and key not in self._warned_keys):
+                        self._warned_keys.add(key)
+                        warnings.warn(
+                            f"BucketIndex bucket for key {key} reached "
+                            f"{len(members)} members; its list grows "
+                            "unboundedly on the driver and each further "
+                            "arrival examines O(members) collisions. "
+                            "Results stay exact, but consider "
+                            'delta_join="device" to shard the bucket '
+                            "state off the driver.",
+                            RuntimeWarning, stacklevel=2,
+                        )
             self.num_keys_inserted += row.shape[0]
         self.num_rows = first_id + d
         self.pairs_examined_total += examined

@@ -25,6 +25,12 @@ be bit-identical to the single-device streaming reference (itself pinned
 to one-shot ``engine.run``), and equal-shape updates must reuse the cached
 sharded runner — zero per-update recompiles, asserted through a trace-time
 compilation-counting hook plus a fused-kernel dispatch counter.
+
+ISSUE 5 adds the DELTA_JOIN axis: {host, device} x {replicate, shuffle}
+x {wavefront, fused-interpret} streaming runs must produce bit-identical
+``EngineResult``s, and a real-dispatch proof (``BucketIndex.insert``
+monkeypatched with a counter) shows the device path keeps the join state
+in-mesh: the driver-resident bucket table is NEVER consulted.
 """
 import pytest
 
@@ -313,6 +319,128 @@ def test_streaming_updates_reuse_cached_sharded_runner():
     the cached runner with zero recompiles."""
     out = run_subprocess(STREAM_RECOMPILE_CODE, devices=4)
     assert "OK stream recompile" in out
+
+
+DELTA_JOIN_MATRIX_CODE = r"""
+import numpy as np
+import jax.numpy as jnp
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan, StreamingEngine
+from repro.core.types import PAD_ID, TrajectoryBatch
+from repro.data import synthetic_setup
+
+batch, forest = synthetic_setup(24, num_types=6, classes_per_type=3,
+                                num_places=40, seed=3)
+RHO = 2.0
+IMPLS = ("wavefront", "fused-interpret")
+
+
+def split(batch, k):
+    P = np.asarray(batch.places); Ln = np.asarray(batch.lengths)
+    cuts = np.linspace(0, P.shape[0], k + 1).astype(int)
+    return [TrajectoryBatch(places=jnp.asarray(P[a:b]),
+                            lengths=jnp.asarray(Ln[a:b]),
+                            user_id=jnp.arange(b - a, dtype=jnp.int32))
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+def score_map(res):
+    left = np.asarray(res.scored.left)
+    right = np.asarray(res.scored.right)
+    mss = np.asarray(res.scored.mss)
+    lvl = np.asarray(res.scored.level_lcs)
+    keep = left != PAD_ID
+    return {
+        (int(a), int(b)): (float(m), tuple(int(x) for x in lv))
+        for a, b, m, lv in zip(left[keep], right[keep], mss[keep], lvl[keep])
+    }
+
+
+for impl in IMPLS:
+    cfg = EngineConfig(rho=RHO, lcs_impl=impl, community_mode="components")
+    one = AnotherMeEngine(forest, cfg).run(batch)
+    for mode in ("replicate", "shuffle"):
+        results = {}
+        for dj in ("host", "device"):
+            st = StreamingEngine(
+                forest, cfg,
+                ExecutionPlan(n_shards=2, score_mode=mode, delta_join=dj),
+            )
+            results[dj] = st.update_many(split(batch, 3))
+        cell = (impl, mode)
+        # end-to-end EngineResult bit-identity across the delta_join axis,
+        # and against the one-shot engine
+        assert score_map(results["device"]) == score_map(results["host"]), cell
+        assert score_map(results["device"]) == score_map(one), cell
+        assert results["device"].similar_pairs == results["host"].similar_pairs, cell
+        assert results["device"].communities == results["host"].communities, cell
+        assert results["device"].communities == one.communities, cell
+        assert (results["device"].stats["full_world_pairs"]
+                == results["host"].stats["full_world_pairs"]), cell
+print("OK delta_join matrix")
+"""
+
+
+def test_streaming_delta_join_parity_matrix():
+    """delta_join axis of the parity matrix: {host, device} x
+    {replicate, shuffle} x {wavefront, fused-interpret} streaming runs are
+    bit-identical to each other and to the one-shot engine."""
+    out = run_subprocess(DELTA_JOIN_MATRIX_CODE, devices=4)
+    assert "OK delta_join matrix" in out
+
+
+DEVICE_JOIN_DISPATCH_CODE = r"""
+import numpy as np
+import jax.numpy as jnp
+import repro.core.stream_index as stream_index
+from repro.api import EngineConfig, ExecutionPlan, StreamingEngine
+from repro.core.types import TrajectoryBatch
+from repro.data import synthetic_setup
+
+calls = []
+real = stream_index.BucketIndex.insert
+
+def counting(self, *args, **kwargs):
+    calls.append(args)
+    return real(self, *args, **kwargs)
+
+stream_index.BucketIndex.insert = counting
+
+batch, forest = synthetic_setup(16, num_types=6, classes_per_type=3,
+                                num_places=40, seed=1)
+
+def split(batch, k):
+    P = np.asarray(batch.places); Ln = np.asarray(batch.lengths)
+    cuts = np.linspace(0, P.shape[0], k + 1).astype(int)
+    return [TrajectoryBatch(places=jnp.asarray(P[a:b]),
+                            lengths=jnp.asarray(Ln[a:b]),
+                            user_id=jnp.arange(b - a, dtype=jnp.int32))
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+cfg = EngineConfig(rho=2.0, community_mode="components")
+dev = StreamingEngine(
+    forest, cfg, ExecutionPlan(n_shards=2, delta_join="device"),
+).update_many(split(batch, 4))
+# the device path NEVER consults the driver-resident bucket table
+assert not calls, f"device path called BucketIndex.insert {len(calls)}x"
+
+host = StreamingEngine(
+    forest, cfg, ExecutionPlan(n_shards=2, delta_join="host"),
+).update_many(split(batch, 4))
+# ...while the host path really does (the counter is live)
+assert len(calls) == 4, len(calls)
+assert dev.similar_pairs == host.similar_pairs
+assert dev.communities == host.communities
+print("OK device join dispatch", len(calls))
+"""
+
+
+def test_device_join_never_calls_bucket_index():
+    """Real-dispatch proof for delta_join="device": the join state lives
+    in-mesh — BucketIndex.insert (the driver-side join) is never invoked,
+    while the monkeypatched counter confirms the host path still routes
+    through it."""
+    out = run_subprocess(DEVICE_JOIN_DISPATCH_CODE, devices=4)
+    assert "OK device join dispatch" in out
 
 
 def test_sharded_engine_has_no_host_encode_stage():

@@ -4,7 +4,8 @@ The allclose sweeps in test_kernels.py cover friendly shapes; these pin the
 edge geometry the sharded pipeline actually produces — length-1 sequences,
 batches that are not a multiple of the block size (shard-local pair buffers
 are capacity-planned, not tile-aligned), and degenerate all-identical
-inputs — for the three trajectory kernels {lcs, minhash, shingle}.
+inputs — for the trajectory kernels {lcs, minhash, shingle} and the
+sorted-slab probe/merge kernels of the in-mesh streaming join.
 
 The LCS cases force ``mode="interpret"`` so the kernel body really executes
 (the "auto" dispatch would route tiny batches to the wavefront).
@@ -265,3 +266,146 @@ class TestShingleGolden:
         keys = shingle_keys(jnp.asarray(types), jnp.asarray(lengths),
                             k=3, num_types=30, block_b=32)
         assert all(len(s) == 1 for s in self._sets(keys))
+
+
+class TestSortedSlabGolden:
+    """Golden shapes for the sorted-merge probe/insert kernels backing the
+    in-mesh streaming join (core/device_index.py), pinned to the numpy
+    bucket-semantics references on the geometries the shard program
+    actually produces: PAD-only route buffers, a single-key world (every
+    entry in one bucket), an exactly-full slab at the capacity boundary,
+    and overflow-drop accounting."""
+
+    def _slab(self, entries, cap):
+        from repro.core.types import PAD_ID
+
+        k = np.full((cap,), PAD_KEY, np.int32)
+        r = np.full((cap,), PAD_ID, np.int32)
+        for i, (key, rid) in enumerate(sorted(entries)):
+            k[i], r[i] = key, rid
+        return k, r
+
+    def _check_probe(self, slab_k, slab_r, keys, rows, nn_cap=64, no_cap=64):
+        from repro.core.device_index import probe_pairs, probe_pairs_ref
+        from repro.core.types import PAD_ID
+
+        lo, hi, examined, ovf = probe_pairs(
+            jnp.asarray(slab_k), jnp.asarray(slab_r),
+            jnp.asarray(keys), jnp.asarray(rows),
+            nn_cap=nn_cap, no_cap=no_cap,
+        )
+        lo, hi = np.asarray(lo), np.asarray(hi)
+        got = sorted((int(a), int(b))
+                     for a, b in zip(lo, hi) if a != PAD_ID)
+        want, examined_want = probe_pairs_ref(slab_k, slab_r, keys, rows)
+        assert int(ovf) == 0
+        assert got == sorted(want)
+        assert int(examined) == examined_want
+        return examined_want
+
+    def _check_merge(self, slab_k, slab_r, keys, rows):
+        from repro.core.device_index import merge_insert, merge_insert_ref
+
+        mk, mr, ovf = merge_insert(
+            jnp.asarray(slab_k), jnp.asarray(slab_r),
+            jnp.asarray(keys), jnp.asarray(rows),
+        )
+        rk, rr, rovf = merge_insert_ref(slab_k, slab_r, keys, rows,
+                                        slab_k.shape[0])
+        np.testing.assert_array_equal(np.asarray(mk), rk)
+        np.testing.assert_array_equal(np.asarray(mr), rr)
+        assert int(ovf) == rovf
+        return int(ovf)
+
+    def test_pad_only_rows(self):
+        # an all-PAD route buffer (an update whose keys all went to other
+        # shards): no pairs, no examined work, slab unchanged
+        from repro.core.types import PAD_ID
+
+        slab_k, slab_r = self._slab([(3, 0), (5, 1), (5, 2)], cap=16)
+        keys = np.full((8,), PAD_KEY, np.int32)
+        rows = np.full((8,), PAD_ID, np.int32)
+        assert self._check_probe(slab_k, slab_r, keys, rows) == 0
+        assert self._check_merge(slab_k, slab_r, keys, rows) == 0
+        # and on a still-empty slab
+        empty_k, empty_r = self._slab([], cap=16)
+        assert self._check_probe(empty_k, empty_r, keys, rows) == 0
+
+    def test_single_key_world(self):
+        # every resident entry and every incoming row shares ONE key: the
+        # bucket spans the whole slab, probe must emit old*new + C(new, 2)
+        from repro.core.types import PAD_ID
+
+        old = 6
+        slab_k, slab_r = self._slab([(7, i) for i in range(old)], cap=16)
+        new = 5
+        keys = np.full((new,), 7, np.int32)
+        rows = (old + np.arange(new)).astype(np.int32)
+        examined = self._check_probe(slab_k, slab_r, keys, rows,
+                                     nn_cap=32, no_cap=64)
+        assert examined == old * new + new * (new - 1) // 2
+        self._check_merge(slab_k, slab_r, keys, rows)
+
+    def test_cap_boundary_insert_exactly_full(self):
+        # merging into a slab that lands EXACTLY at capacity: no overflow,
+        # no dropped entry, sorted invariant preserved
+        cap = 8
+        slab_k, slab_r = self._slab([(2, 0), (4, 1), (9, 2)], cap=cap)
+        keys = np.asarray([1, 4, 4, 9, 11], np.int32)
+        rows = np.asarray([10, 11, 12, 13, 14], np.int32)
+        assert self._check_merge(slab_k, slab_r, keys, rows) == 0
+        from repro.core.device_index import merge_insert
+
+        mk, _, ovf = merge_insert(jnp.asarray(slab_k), jnp.asarray(slab_r),
+                                  jnp.asarray(keys), jnp.asarray(rows))
+        mk = np.asarray(mk)
+        assert int(ovf) == 0
+        assert (mk != PAD_KEY).sum() == cap  # exactly full
+        assert (np.diff(mk) >= 0).all()      # still sorted
+
+    def test_overflow_drop_accounting(self):
+        # one entry too many: the drop is COUNTED (the engine regrows and
+        # retries; a committed drop never happens), and the probe's pair
+        # buffers report their own overflow the same way
+        cap = 4
+        slab_k, slab_r = self._slab([(2, 0), (4, 1), (9, 2)], cap=cap)
+        keys = np.asarray([1, 4], np.int32)
+        rows = np.asarray([10, 11], np.int32)
+        assert self._check_merge(slab_k, slab_r, keys, rows) == 1
+        from repro.core.device_index import probe_pairs
+
+        # 5 incoming rows of one key against 3 residents of the same key:
+        # 15 old-new + 10 new-new collisions vs caps (8, 8)
+        slab_k, slab_r = self._slab([(7, 0), (7, 1), (7, 2)], cap=8)
+        keys = np.full((5,), 7, np.int32)
+        rows = (3 + np.arange(5)).astype(np.int32)
+        lo, hi, examined, ovf = probe_pairs(
+            jnp.asarray(slab_k), jnp.asarray(slab_r),
+            jnp.asarray(keys), jnp.asarray(rows), nn_cap=8, no_cap=8,
+        )
+        assert int(examined) == 15 + 10      # exact even when overflowing
+        assert int(ovf) == (10 - 8) + (15 - 8)
+
+    def test_randomized_vs_reference(self):
+        # seeded sweep over mixed shapes (the differential harness pins
+        # the end-to-end join; this pins the kernels in isolation)
+        from repro.core.types import PAD_ID
+
+        rng = np.random.default_rng(0)
+        for trial in range(10):
+            cap = int(rng.integers(8, 40))
+            n_old = int(rng.integers(0, cap // 2 + 1))
+            ent = sorted(
+                (int(k), i)
+                for i, k in enumerate(rng.integers(0, 9, n_old))
+            )
+            slab_k, slab_r = self._slab(ent, cap=cap)
+            r = int(rng.integers(1, 20))
+            keys = rng.integers(0, 9, r).astype(np.int32)
+            rows = (100 + np.arange(r)).astype(np.int32)
+            drop = rng.random(r) < 0.3
+            keys[drop] = PAD_KEY
+            rows[drop] = PAD_ID
+            self._check_probe(slab_k, slab_r, keys, rows,
+                              nn_cap=256, no_cap=256)
+            self._check_merge(slab_k, slab_r, keys, rows)

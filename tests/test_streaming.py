@@ -258,3 +258,56 @@ def test_streaming_world_growth_and_preallocation():
     for piece in pieces:
         pre.update(piece)
     assert pre._cap == pre._cap_floor  # never reallocated
+
+
+def test_bucket_index_hot_key_warns_but_stays_exact():
+    """ISSUE 5 fix: hot buckets grow unboundedly on the driver — crossing
+    the per-bucket cap must WARN (once per key), never truncate: a
+    pathological single-key world still completes with exact
+    pairs_examined accounting."""
+    n = 30
+    keys = np.zeros((n, 1), np.int32)  # every row shares ONE key
+    index = BucketIndex(hot_bucket_warn=8)
+    examined_total = 0
+    pairs: set = set()
+    with pytest.warns(RuntimeWarning, match="bucket for key 0"):
+        for start in range(0, n, 5):
+            lo, hi, examined = index.insert(keys[start : start + 5],
+                                            first_id=start)
+            examined_total += examined
+            pairs |= set(zip(lo.tolist(), hi.tolist()))
+    assert examined_total == n * (n - 1) // 2       # exact partition
+    assert index.full_join_size() == examined_total
+    assert pairs == {(i, j) for i in range(n) for j in range(i + 1, n)}
+    # warned exactly once for the one hot key
+    assert index._warned_keys == {0}
+    # default cap is high enough that ordinary worlds never warn
+    import warnings as _warnings
+
+    quiet = BucketIndex()
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        quiet.insert(keys[:20])
+
+
+def test_streaming_hot_key_world_completes_exactly():
+    """Engine-level regression: an all-colliding-key world with a tiny
+    warn cap completes, warns, and the examined counts still partition
+    the C(n, 2) full join."""
+    _, forest = random_world(0, n=4)
+    n, L = 12, 4
+    places = np.full((n, L), 3, np.int32)
+    lengths = np.full((n,), L, np.int32)
+    batch = make_batch(places, lengths)
+    want = AnotherMeEngine(forest, EngineConfig(rho=2.0)).run(batch)
+    stream = StreamingEngine(forest, EngineConfig(rho=2.0))
+    stream._index = BucketIndex(hot_bucket_warn=4)
+    examined = []
+    with pytest.warns(RuntimeWarning, match="delta_join"):
+        for piece in split_batch(batch, [5, 9]):
+            res = stream.update(piece)
+            examined.append(res.stats["pairs_examined"])
+    assert res.similar_pairs == want.similar_pairs
+    assert res.communities == want.communities
+    assert score_map(res) == score_map(want)
+    assert sum(examined) == res.stats["full_world_pairs"]
