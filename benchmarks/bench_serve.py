@@ -1,0 +1,219 @@
+"""Query-serving benchmark: top-k "find another me" latency and throughput.
+
+Feeds a resident world to a :class:`StreamingEngine`, then drives a
+:class:`QueryEngine` with a steady stream of query micro-batches — the
+online half of the paper's workload ("pose one trajectory, get the most
+similar users back") where LATENCY, not ingest throughput, is the
+scoreboard.  The grid sweeps query batch size Q against world size N;
+each cell reports per-batch wall-time percentiles and queries/sec for
+both the plain path and the REPOSE-pruned path, plus the serving-shape
+evidence: one compiled program pair for the whole run (``serve_traces``
+plateaus after warmup) and driver traffic that scales with [Q, k] + the
+query batch — never with the world.
+
+Writes ``BENCH_serve.json`` next to ``BENCH_score.json`` /
+``BENCH_stream.json``; the tier-1 CI workflow runs ``--smoke`` and
+uploads the JSON as an artifact per PR.
+
+JSON schema (``schema: bench_serve/v1``)::
+
+    {
+      "schema": "bench_serve/v1",
+      "backend": "cpu" | "tpu" | ...,
+      "jax_version": "...",
+      "smoke": bool,
+      "grids": [
+        {"N": int, "Q": int, "k": int, "batches": int,
+         "serve": {"batch_wall_s": [...], "p50_ms": float, "p99_ms": float,
+                   "mean_ms": float, "queries_per_sec": float,
+                   "candidates_per_batch": float,
+                   "driver_bytes_per_batch": float,
+                   "serve_traces": int, "probe_traces": int,
+                   "steady_state_recompiles": int},
+         "serve_pruned": {... same fields, plus "cells_skipped": int,
+                          "rounds_skipped": int},
+         "pruned_vs_plain": float}, ...   # plain p50 / pruned p50
+      ]
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_HERE)
+for p in (_REPO, os.path.join(_REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _query_batch(places, lengths, sel):
+    from repro.core.types import TrajectoryBatch
+
+    return TrajectoryBatch(
+        places=jnp.asarray(places[sel]),
+        lengths=jnp.asarray(lengths[sel]),
+        user_id=jnp.arange(len(sel), dtype=jnp.int32),
+    )
+
+
+def _serve_run(stream, places, lengths, *, Q, k, batches, prune, seed):
+    """Drive one QueryEngine with ``batches`` steady-shape micro-batches
+    (a warm pass over the same cycle is excluded from the timings)."""
+    from repro.api import QueryEngine
+
+    rng = np.random.default_rng(seed)
+    qe = QueryEngine(stream, k=k, serve_prune=prune)
+    # warm pass over the exact batch cycle we will time: compiles the
+    # program pair and ratchets the pow2-sticky caps to the max any batch
+    # needs, so the timed pass measures the steady state the
+    # zero-recompile contract covers
+    sels = [rng.integers(0, places.shape[0], Q) for _ in range(batches)]
+    for sel in sels:
+        res = qe.query(_query_batch(places, lengths, sel))
+    warm_traces = res.stats["serve_traces"] + res.stats["probe_traces"]
+    walls, cands, bytes_in = [], [], []
+    skipped_cells = skipped_rounds = 0
+    for sel in sels:
+        qb = _query_batch(places, lengths, sel)
+        t0 = time.perf_counter()
+        res = qe.query(qb)
+        np.asarray(res.match_ids)  # materialize before stopping the clock
+        walls.append(time.perf_counter() - t0)
+        cands.append(res.stats["candidates"])
+        bytes_in.append(res.stats["driver_bytes_in"])
+        skipped_cells += res.stats["cells_skipped"]
+        skipped_rounds += res.stats["rounds_skipped"]
+    out = {
+        "batch_wall_s": [round(w, 6) for w in walls],
+        "p50_ms": round(float(np.percentile(walls, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(walls, 99)) * 1e3, 3),
+        "mean_ms": round(float(np.mean(walls)) * 1e3, 3),
+        "queries_per_sec": round(Q * len(walls) / sum(walls), 1),
+        "candidates_per_batch": round(float(np.mean(cands)), 1),
+        "driver_bytes_per_batch": round(float(np.mean(bytes_in)), 1),
+        "serve_traces": int(res.stats["serve_traces"]),
+        "probe_traces": int(res.stats["probe_traces"]),
+        # compiles after the warmup batch; 0 = the production contract
+        "steady_state_recompiles": int(
+            res.stats["serve_traces"] + res.stats["probe_traces"]
+            - warm_traces
+        ),
+    }
+    if prune:
+        out["cells_skipped"] = int(skipped_cells)
+        out["rounds_skipped"] = int(skipped_rounds)
+    return out
+
+
+def bench_cell(N, Q, *, k=10, batches=16, rho=2.0, seed=0):
+    """One grid cell: resident world of N rows, ``batches`` query
+    micro-batches of Q trajectories each, plain and pruned."""
+    from repro.api import EngineConfig, StreamingEngine
+    from repro.data import synthetic_setup
+
+    batch, forest = synthetic_setup(
+        N, num_types=30, classes_per_type=10, num_places=1000, seed=seed
+    )
+    places = np.asarray(batch.places)
+    lengths = np.asarray(batch.lengths)
+    stream = StreamingEngine(
+        forest, EngineConfig(rho=rho, community_mode="components"),
+        world_capacity=N,
+    )
+    stream.update(batch)
+    plain = _serve_run(stream, places, lengths, Q=Q, k=k, batches=batches,
+                       prune=False, seed=seed + 1)
+    pruned = _serve_run(stream, places, lengths, Q=Q, k=k, batches=batches,
+                        prune=True, seed=seed + 1)
+    return {
+        "N": N, "Q": Q, "k": k, "batches": batches,
+        "serve": plain, "serve_pruned": pruned,
+        "pruned_vs_plain": round(
+            plain["p50_ms"] / max(pruned["p50_ms"], 1e-6), 3
+        ),
+    }
+
+
+def _grid(smoke, full):
+    if smoke:
+        return [(128, 4), (256, 16)]
+    grid = [(512, 8), (512, 64), (2048, 8), (2048, 64)]
+    if full:
+        grid += [(8192, 8), (8192, 64), (8192, 256)]
+    return grid
+
+
+def bench(*, smoke=False, full=False, out_path=None):
+    grids = [bench_cell(N, Q, batches=8 if smoke else 16)
+             for N, Q in _grid(smoke, full)]
+    report = {
+        "schema": "bench_serve/v1",
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "smoke": bool(smoke),
+        "grids": grids,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+def run(full: bool = False, smoke: bool | None = None):
+    """benchmarks/run.py entry point: CSV rows + BENCH_serve.json."""
+    from benchmarks.common import Row
+
+    report = bench(smoke=(not full) if smoke is None else smoke, full=full,
+                   out_path=os.path.join(_REPO, "BENCH_serve.json"))
+    for cell in report["grids"]:
+        tag = f"N{cell['N']}_Q{cell['Q']}"
+        s, p = cell["serve"], cell["serve_pruned"]
+        yield Row(
+            f"bench_serve/serve/{tag}",
+            s["mean_ms"] * 1e3,
+            f"p50={s['p50_ms']}ms p99={s['p99_ms']}ms "
+            f"{s['queries_per_sec']:.0f} q/s "
+            f"[recompiles={s['steady_state_recompiles']}]",
+        )
+        yield Row(
+            f"bench_serve/serve_pruned/{tag}",
+            p["mean_ms"] * 1e3,
+            f"p50={p['p50_ms']}ms p99={p['p99_ms']}ms "
+            f"{p['queries_per_sec']:.0f} q/s "
+            f"[skipped={p.get('cells_skipped', 0)} cells, "
+            f"x{cell['pruned_vs_plain']} vs plain]",
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grid (adds N=8192 cells)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    report = bench(smoke=args.smoke, full=args.full, out_path=args.out)
+    print(f"# backend={report['backend']} jax={report['jax_version']}")
+    for cell in report["grids"]:
+        s, p = cell["serve"], cell["serve_pruned"]
+        print(f"N={cell['N']:<6d} Q={cell['Q']:<4d} "
+              f"plain p50 {s['p50_ms']:8.2f} ms  p99 {s['p99_ms']:8.2f} ms "
+              f"{s['queries_per_sec']:9.0f} q/s | "
+              f"pruned p50 {p['p50_ms']:8.2f} ms "
+              f"{p['queries_per_sec']:9.0f} q/s "
+              f"recompiles={s['steady_state_recompiles']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import traceback
 
 MODULES = [
     "bench_score",
+    "bench_serve",
     "bench_stream",
     "fig7_processing_time",
     "fig8_pairs_compared",

@@ -17,6 +17,9 @@ Components (all replaceable independently):
   CandidateBackend / BackendContext                backend protocol
   EncodeStage / CandidateStage / ScoreStage / CommunitiesStage
       the typed stage pipeline the engine composes
+  QueryEngine                                      online top-k serving:
+      QueryEngine(stream).query(batch) probes the resident index read-only
+      and returns per-query top-k (match id, mss) without mutating the world
   CapacityPlanner                                  buffer sizing + overflow retry
   Instrumentation                                  phase timing/stats wrapper
   make_sharded_pipeline / plan_capacities / DistributedPlan
@@ -41,6 +44,10 @@ from repro.api.sharded import (
     make_streaming_join_pipeline, make_streaming_score_pipeline,
     pad_to_shards, plan_capacities, plan_stream_capacities,
     plan_stream_join, sticky_join_plan,
+)
+from repro.api.serving import (
+    QueryEngine, QueryPlan, QueryResult, make_query_probe_pipeline,
+    make_query_score_pipeline, plan_query_capacities, sticky_query_plan,
 )
 from repro.api.stages import (
     LCS_IMPLS, CandidateStage, CommunitiesStage, EncodeStage, PipelineContext,

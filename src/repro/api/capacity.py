@@ -134,3 +134,37 @@ class CapacityPlanner:
         return plan_stream_join(
             keys_flat, n_shards, stats, floor_pow2=floor_pow2
         )
+
+    def plan_query(
+        self,
+        num_queries: int,
+        k_max: int,
+        *,
+        n_shards: int,
+        cap_local: int,
+        world_L: int,
+        q_len_max: int,
+        cand_total=None,
+        keys_flat=None,
+        stats=None,
+        floor_pow2: int = 2,
+    ):
+        """Exact capacity plan for one query-serving micro-batch.
+
+        Delegates to :func:`repro.api.serving.plan_query_capacities`: the
+        query, top-k and candidate buffers are sized from the exact
+        candidate cardinality — the host BucketIndex probe's count
+        (``cand_total``) or, for device-resident worlds, the per-owner
+        new-vs-old loads the :class:`~repro.core.device_index.StreamJoinStats`
+        mirror derives from ``keys_flat``/``stats``.  Capacities quantize
+        to powers of two; :class:`QueryEngine` keeps them sticky across
+        micro-batches so both compiled serving programs are reused —
+        zero steady-state recompiles under query traffic.
+        """
+        from repro.api.serving import plan_query_capacities
+
+        return plan_query_capacities(
+            num_queries, k_max, n_shards=n_shards, cap_local=cap_local,
+            world_L=world_L, q_len_max=q_len_max, cand_total=cand_total,
+            keys_flat=keys_flat, stats=stats, floor_pow2=floor_pow2,
+        )

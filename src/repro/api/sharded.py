@@ -774,8 +774,9 @@ def make_streaming_join_pipeline(
          rows      [n_shards * key_in_cap] int32)  # PAD-padded chunks
         -> dict: slab_keys/slab_rows (merged — commit only on success),
                  left/right [n_shards, pair_cap] deduped delta pairs,
-                 count [n_shards], examined [n_shards],
-                 overflow [n_shards, 4]
+                 count [n_shards], max_count [n_shards] (the in-mesh pmax
+                 of the post-dedup counts, replicated — the tight score
+                 pair cap), examined [n_shards], overflow [n_shards, 4]
 
     Stages per shard: (1) all_to_all the incoming occurrences to
     ``hash(key) % n_shards`` through the shared :func:`_route` machinery;
@@ -823,21 +824,28 @@ def make_streaming_join_pipeline(
         o4 = jnp.maximum(cand.count - plan.pair_cap, 0)
         slab_k2, slab_r2, o5 = merge_insert(slab_k, slab_r, rk, rr)
         count = jnp.minimum(cand.count, plan.pair_cap)
+        # in-mesh count reduction: the worst per-shard POST-dedup resting
+        # count, replicated to every shard.  The driver sizes the score
+        # program's pair buffers from this instead of the pre-dedup
+        # emission bound baked into plan.pair_cap (cross-owner duplicates
+        # and the global-vs-per-shard gap both vanish), so the resting
+        # buffers are sliced down before a single padded pair is scored
+        max_count = jax.lax.pmax(count, axis_name)
         overflow = jnp.stack([o1 + o2, o3 + o4, o5,
                               jnp.zeros((), jnp.int32)]).astype(jnp.int32)
         return (slab_k2, slab_r2, left, right, count.reshape(1),
-                examined.reshape(1), overflow)
+                max_count.reshape(1), examined.reshape(1), overflow)
 
     spec_in = (P(axis_name), P(axis_name), P(axis_name), P(axis_name))
     spec_out = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
-                P(axis_name), P(axis_name), P(axis_name))
+                P(axis_name), P(axis_name), P(axis_name), P(axis_name))
     fn = compat.shard_map(
         shard_fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out
     )
 
     @jax.jit
     def run(slab_keys, slab_rows, keys, rows):
-        sk, sr, left, right, count, examined, overflow = fn(
+        sk, sr, left, right, count, max_count, examined, overflow = fn(
             slab_keys, slab_rows, keys, rows
         )
         return {
@@ -846,6 +854,7 @@ def make_streaming_join_pipeline(
             "left": left.reshape(n_shards, -1),
             "right": right.reshape(n_shards, -1),
             "count": count.reshape(n_shards),
+            "max_count": max_count.reshape(n_shards),
             "examined": examined.reshape(n_shards),
             "overflow": overflow.reshape(n_shards, -1),
         }

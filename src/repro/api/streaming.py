@@ -62,7 +62,7 @@ from repro.api.sharded import (
 )
 from repro.api.stages import _KERNEL_MODES, _score_with_kernel
 from repro.core import communities as comm
-from repro.core.device_index import StreamJoinStats
+from repro.core.device_index import ShardSummaries, StreamJoinStats
 from repro.core.encoding import encode_codes, encode_types
 from repro.core.pipeline import AnotherMeResult as EngineResult
 from repro.core.similarity import (
@@ -155,6 +155,16 @@ class StreamingEngine:
         self._slab_cap = 0
         self._join_stats = StreamJoinStats(plan.n_shards)
         self._join_plan = None
+        self._score_caps = None  # sticky (pair_cap, rest_cap) of the
+        #   device-pair score program, sized from the join's in-mesh
+        #   post-dedup count reduction (tighter than the join's own
+        #   pre-dedup pair_cap)
+        # per-world-shard length summaries, maintained on insert — the
+        # serve-time REPOSE prune bounds (api/serving.py reads these; they
+        # are world metadata, so the host path keeps them too)
+        self.shard_summaries = ShardSummaries(
+            plan.n_shards if self._mesh_world else 1
+        )
         self._slab_floor = int(join_slab_capacity or 0)  # presize hint: a
         #   caller expecting ~E total resident key occurrences passes
         #   join_slab_capacity=E so the slabs never regrow (and the join
@@ -207,15 +217,15 @@ class StreamingEngine:
         num_pruned = 0
         if self.delta_join == "device":
             with instr.phase("delta_join"):
-                left_dev, right_dev, num_delta, examined = (
+                left_dev, right_dev, num_delta, max_delta, examined = (
                     self._device_delta_join(keys_np, n_old)
-                    if d else (None, None, 0, 0)
+                    if d else (None, None, 0, 0, 0)
                 )
             with instr.phase("score"):
                 if num_delta:
                     (s_left, s_right, s_lvl, s_mss,
                      num_pruned) = self._score_device_pairs(
-                        left_dev, right_dev)
+                        left_dev, right_dev, max_delta, num_delta)
                 else:
                     s_left = s_right = np.empty((0,), np.int32)
                     s_lvl = np.empty((0, self._H), np.int32)
@@ -274,6 +284,16 @@ class StreamingEngine:
             driver_mirror_keys=self._join_stats.num_keys,
             join_traces=self.join_traces[0],
         )
+        if self.delta_join == "device":
+            # the differential harness asserts the score buffers are sized
+            # from the in-mesh post-dedup count reduction, never from the
+            # join's pre-dedup emission bound
+            instr.record(
+                join_pair_cap=(self._join_plan.pair_cap
+                               if self._join_plan else 0),
+                score_pair_cap=(self._score_caps[0]
+                                if self._score_caps else 0),
+            )
         if self.config.score_prune:
             instr.record(num_pruned=num_pruned)
         return EngineResult(
@@ -326,6 +346,7 @@ class StreamingEngine:
         self._places_np[n0 : n0 + d, Lb:] = PAD_PLACE
         self._lengths_np[n0 : n0 + d] = lengths
         self.n = n0 + d
+        self.shard_summaries.insert(n0, lengths)
         # device-resident append: only the new rows transfer.  Each branch
         # below counts exactly the arrays it converts to device buffers,
         # so driver_bytes_in stays an exact transfer ledger
@@ -570,7 +591,9 @@ class StreamingEngine:
         The resident bucket state (key-sharded sorted slabs) is probed and
         merged on-device; the deduped delta pairs come to rest in-mesh as
         ``[n_shards, pair_cap]`` buffers that feed the score program
-        directly.  Returns ``(left_dev, right_dev, num_delta, examined)``.
+        directly.  Returns ``(left_dev, right_dev, num_delta, max_delta,
+        examined)`` where ``max_delta`` is the in-mesh pmax of the
+        per-shard post-dedup counts — the tight score-buffer bound.
 
         State is committed functionally: the join program RETURNS the
         merged slabs, and the engine adopts them (and folds the update
@@ -647,8 +670,9 @@ class StreamingEngine:
         self._join_stats.commit(k_flat, _positive_hash_np(k_flat) % n_sh)
         self._join_plan = jplan
         num_delta = int(np.asarray(out["count"]).sum())
+        max_delta = int(np.asarray(out["max_count"])[0])
         examined = int(np.asarray(out["examined"]).sum())
-        return out["left"], out["right"], num_delta, examined
+        return out["left"], out["right"], num_delta, max_delta, examined
 
     def _ensure_slab(self, slab_cap: int) -> None:
         """Allocate or regrow the resident slabs to ``slab_cap`` per shard.
@@ -683,26 +707,43 @@ class StreamingEngine:
             self.runner_builds += 1
         return runner
 
-    def _score_device_pairs(self, left_dev, right_dev):
+    def _score_device_pairs(self, left_dev, right_dev, max_delta,
+                            num_delta):
         """Score the in-mesh delta pairs straight off their device buffers.
 
         The pairs rest on their pair-hash shard; "replicate" scores them
         in place against the all_gathered in-mesh encodings, "shuffle"
         runs the shared owner hops.  ``score_prune`` is applied IN-MESH by
         the score program (the pairs never visit the host to be pruned
-        there).  Capacities derive deterministically from the sticky join
-        plan, so they inherit its zero-steady-state-recompile property.
+        there).
+
+        The score buffers are sized from the join's in-mesh count
+        reduction, NOT from the join plan's pre-dedup emission bound:
+        dedup compacts every shard's valid pairs to the front, so the
+        resting ``[n_shards, join_pair_cap]`` buffers slice down to
+        ``pow2(max_delta)`` columns exactly (replicate scores in place,
+        bounded per shard by ``max_delta``; the shuffle hops and resting
+        buffers are bounded by the GLOBAL post-dedup count ``num_delta``,
+        since a redistribution can pile every pair onto one owner).  Both
+        caps are sticky (monotone max) so they inherit the join plan's
+        zero-steady-state-recompile property.
         """
         n_sh = self.plan.n_shards
-        pair_cap = int(left_dev.shape[-1])
+        join_cap = int(left_dev.shape[-1])
+        pair_cap = min(_pow2(max_delta), join_cap)
+        rest_cap = min(_pow2(num_delta), join_cap)
+        if self._score_caps is not None:
+            pair_cap = min(max(pair_cap, self._score_caps[0]), join_cap)
+            rest_cap = min(max(rest_cap, self._score_caps[1]), join_cap)
+        self._score_caps = (pair_cap, rest_cap)
+        if pair_cap < join_cap:
+            left_dev = left_dev[:, :pair_cap]
+            right_dev = right_dev[:, :pair_cap]
+        shuffle = self.plan.score_mode == "shuffle"
         splan = StreamShardPlan(
             n_shards=n_sh, cap_local=self._cap // n_sh, pair_cap=pair_cap,
-            # pair_cap bounds the GLOBAL deduped pair count (it is the
-            # pow2 of the update's total pre-dedup emissions), so no hop
-            # bucket and no resting shard can ever see more than pair_cap
-            # valid rows — a safe static bound for both hop stages
-            hop_cap=pair_cap if self.plan.score_mode == "shuffle" else 0,
-            out_cap=pair_cap,
+            hop_cap=rest_cap if shuffle else 0,
+            out_cap=rest_cap if shuffle else pair_cap,
         )
         for _ in range(self.planner.max_retries + 1):
             out = self._run_device_score(splan, left_dev, right_dev)

@@ -173,6 +173,49 @@ def merge_insert(
     return merged_k[:cap], merged_r[:cap], overflow
 
 
+def probe_rows(
+    slab_keys: jnp.ndarray,
+    slab_rows: jnp.ndarray,
+    keys: jnp.ndarray,
+    payload: jnp.ndarray,
+    *,
+    cap: int,
+):
+    """Read-only range probe: resident rows matching each incoming key.
+
+    The query-serving half of :func:`probe_pairs`: the same searchsorted
+    range probe of the resident sorted slab, but nothing else — no
+    new-vs-new stage (queries never pair with each other), no merge (the
+    slab is never modified), and no min/max canonicalization (the incoming
+    ``payload`` ids — query indices — live in a different namespace than
+    the resident row ids, so ordering them would conflate the two).
+
+    slab_keys/slab_rows: the resident sorted slab (PAD at the end).
+    keys/payload: int32 [R] incoming (key, payload id) occurrences,
+        PAD-padded anywhere (the post-route buffer); sorted internally.
+    cap: static capacity of the match buffer (planned exactly host-side
+        from the count mirror; overflow counted, never silently dropped).
+
+    Returns ``(rows [cap], out_payload [cap], examined, overflow)``:
+    every (resident row, payload) match with PAD_ID in unused slots, the
+    exact pre-dedup match count, and the slots that did not fit.
+    """
+    keys_s, pay_s = jax.lax.sort((keys, payload), num_keys=2)
+    valid = keys_s != PAD_KEY
+    lo_idx = jnp.searchsorted(slab_keys, keys_s, side="left").astype(jnp.int32)
+    hi_idx = jnp.searchsorted(slab_keys, keys_s, side="right").astype(jnp.int32)
+    counts = jnp.where(valid, hi_idx - lo_idx, 0)
+    excl = jnp.cumsum(counts) - counts
+    q, f, u, total = _enumerate_slots(excl, counts, cap)
+    sidx = jnp.clip(lo_idx[f] + u, 0, slab_keys.shape[0] - 1)
+    ok = q < total
+    rows = jnp.where(ok, slab_rows[sidx], PAD_ID)
+    out_payload = jnp.where(ok, pay_s[f], PAD_ID)
+    examined = total.astype(jnp.int32)
+    overflow = jnp.maximum(total - cap, 0).astype(jnp.int32)
+    return rows, out_payload, examined, overflow
+
+
 # ---------------------------------------------------------------------------
 # numpy references (the golden-shape oracles)
 # ---------------------------------------------------------------------------
@@ -199,6 +242,26 @@ def probe_pairs_ref(slab_keys, slab_rows, keys, rows):
             pairs.append((min(m, rid), max(m, rid)))
         seen.setdefault(k, []).append(rid)
     return pairs, examined
+
+
+def probe_rows_ref(slab_keys, slab_rows, keys, payload):
+    """Bucket-semantics oracle for :func:`probe_rows`: the pre-dedup
+    (resident row, payload) match multiset and the exact examined count."""
+    slab_keys = np.asarray(slab_keys)
+    slab_rows = np.asarray(slab_rows)
+    buckets: dict[int, list[int]] = {}
+    for k, rid in zip(slab_keys.tolist(), slab_rows.tolist()):
+        if k != PAD_KEY:
+            buckets.setdefault(k, []).append(rid)
+    matches = []
+    examined = 0
+    for k, p in zip(np.asarray(keys).tolist(), np.asarray(payload).tolist()):
+        if k == PAD_KEY:
+            continue
+        for m in buckets.get(k, []):
+            examined += 1
+            matches.append((m, p))
+    return matches, examined
 
 
 def merge_insert_ref(slab_keys, slab_rows, keys, rows, cap):
@@ -282,3 +345,33 @@ class StreamJoinStats:
     @property
     def num_keys(self) -> int:
         return len(self.counts)
+
+
+class ShardSummaries:
+    """Per-world-shard length summaries for REPOSE-style serve pruning.
+
+    Maintained on INSERT (O(d) per micro-batch, counts and maxima only —
+    never trajectory content): for each round-robin world shard
+    (``shard = id % n_shards``) the row count and the maximum trajectory
+    length of any resident row.  At query time the free MSS bound
+    ``betas_sum * min(len_query, max_len[shard])`` upper-bounds every
+    candidate the shard can hold, so a shard whose bound cannot beat the
+    query's ``rho`` — or, once k matches exist, its running kth-best —
+    is skipped before a single code row is scored (the reference-length
+    partition bound of REPOSE, PAPERS.md).
+    """
+
+    def __init__(self, n_shards: int):
+        self.n_shards = n_shards
+        self.rows = np.zeros((n_shards,), np.int64)
+        self.max_len = np.zeros((n_shards,), np.int64)
+
+    def insert(self, first_id: int, lengths: np.ndarray) -> None:
+        """Fold one micro-batch of rows ``first_id .. first_id + d - 1``."""
+        lengths = np.asarray(lengths, np.int64).reshape(-1)
+        if lengths.size == 0:
+            return
+        shard = (first_id + np.arange(lengths.shape[0], dtype=np.int64)) \
+            % self.n_shards
+        np.add.at(self.rows, shard, 1)
+        np.maximum.at(self.max_len, shard, lengths)

@@ -145,6 +145,49 @@ class BucketIndex:
             examined,
         )
 
+    def probe(
+        self, keys_np: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Read-only probe: resident rows sharing >= 1 key per query row.
+
+        The serving half of :meth:`insert` — the same bucket lookups, but
+        the probing rows are NEVER inserted (queries are not part of the
+        world, so the index is left untouched and concurrent queries
+        commute with updates).  This is the host implementation of the
+        read-only ``probe(keys)`` protocol that
+        :func:`repro.core.device_index.probe_rows` implements for the
+        device-resident slab index — the query engine works against either
+        without branching.
+
+        keys_np: int32 [Q, S] PAD_KEY-padded join keys of the Q query
+        rows, exactly as the backend's ``join_keys`` builds them.
+
+        Returns ``(qidx, rows, examined)``: deduplicated int32 (query
+        index, resident row id) candidate pairs (a pair sharing several
+        keys appears once) plus the exact pre-dedup collision count.
+        """
+        keys_np = np.asarray(keys_np)
+        buckets = self._buckets
+        q_out: list[int] = []
+        r_out: list[int] = []
+        examined = 0
+        for q in range(keys_np.shape[0]):
+            row = keys_np[q]
+            row = np.unique(row[row != PAD_KEY])
+            seen: set[int] = set()
+            for key in row.tolist():
+                for m in buckets.get(key, ()):
+                    examined += 1
+                    if m not in seen:
+                        seen.add(m)
+                        q_out.append(q)
+                        r_out.append(m)
+        return (
+            np.asarray(q_out, np.int32),
+            np.asarray(r_out, np.int32),
+            examined,
+        )
+
     def full_join_size(self) -> int:
         """The pre-dedup pair count a one-shot join over the CURRENT world
         would enumerate: ``sum_buckets C(|bucket|, 2)``.  O(1): each

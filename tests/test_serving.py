@@ -1,0 +1,471 @@
+"""Oracle suite for online top-k query serving (ISSUE 6 acceptance).
+
+The contract under test: ``QueryEngine(stream).query(batch)`` returns, for
+every query trajectory, exactly the top-k world rows by brute-force MSS
+over the WHOLE resident world — matches require ``mss > rho`` (per-query),
+order is (mss descending, row id ascending), empty slots are
+``(PAD_ID, -1.0)`` — and the answer is bit-identical across
+{host, device} delta_join x {1, 2, 4, 8} shards x
+{wavefront, fused-interpret}, with and without REPOSE-style per-shard
+pruning.  Whole-world recall is made airtight by ``EngineConfig(k=1)``:
+hierarchy means any pair with mss > 0 shares a coarsest-level type, so
+1-shingles surface every possible match.
+
+Also pins the production-shape claims:
+* queries NEVER mutate the world (read-only probe protocol: the bucket
+  index is probed, not inserted into, and updates interleave freely);
+* >= 10 consecutive query micro-batches reuse ONE compiled program pair —
+  zero steady-state recompiles, proven by trace-counter hooks;
+* pruning never changes results, and on a world engineered with one
+  long-row shard it really skips the hopeless shards.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import run_subprocess
+from repro.api import EngineConfig, ExecutionPlan, QueryEngine, StreamingEngine
+from repro.core.types import PAD_ID, TrajectoryBatch
+from repro.data import synthetic_setup
+
+RHO = 1.0
+
+
+def make_batch(places, lengths):
+    places = np.asarray(places, np.int32)
+    lengths = np.asarray(lengths, np.int32)
+    return TrajectoryBatch(
+        places=jnp.asarray(places), lengths=jnp.asarray(lengths),
+        user_id=jnp.arange(places.shape[0], dtype=jnp.int32),
+    )
+
+
+def brute_topk(stream, q_places, q_lengths, k_vec, rho_vec):
+    """Whole-world brute force: score every query against every resident
+    row (no candidate generation at all) and take the top-k above rho with
+    the deterministic (mss desc, row asc) order."""
+    from repro.core.encoding import encode_codes
+    from repro.core.similarity import mss_scores, multi_level_lcs
+
+    n = stream.n
+    if stream._mesh_world:
+        S = stream.plan.n_shards
+        cap_l = stream._cap // S
+        g = np.arange(n)
+        phys = np.asarray(stream._places_dev)[(g % S) * cap_l + g // S]
+        codes = np.asarray(encode_codes(jnp.asarray(phys), stream.tables))
+    else:
+        codes = np.asarray(stream._codes_dev)[:n]
+    lens = np.sum(codes[:, 0, :] >= 0, axis=-1).astype(np.int32)
+    qc = np.asarray(encode_codes(jnp.asarray(
+        np.asarray(q_places, np.int32)), stream.tables))
+    out = []
+    for q in range(qc.shape[0]):
+        if n == 0 or k_vec[q] == 0:
+            out.append([])
+            continue
+        lvl = multi_level_lcs(
+            jnp.asarray(np.repeat(qc[q:q + 1], n, 0)),
+            jnp.asarray(np.repeat(np.asarray(q_lengths)[q:q + 1], n)),
+            jnp.asarray(codes), jnp.asarray(lens),
+        )
+        mss = np.asarray(mss_scores(lvl, stream.betas))
+        order = sorted(range(n), key=lambda r: (-mss[r], r))
+        out.append([(r, np.float32(mss[r])) for r in order
+                    if mss[r] > rho_vec[q]][:int(k_vec[q])])
+    return out
+
+
+def result_lists(res):
+    return [
+        [(int(r), m) for r, m in zip(ids, mss) if r != PAD_ID]
+        for ids, mss in zip(res.match_ids, res.mss)
+    ]
+
+
+def world(seed=0, n=24):
+    return synthetic_setup(
+        n, num_types=5, classes_per_type=3, num_places=30,
+        min_len=2, max_len=8, seed=seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the oracle property, single device (in-process)
+# ---------------------------------------------------------------------------
+def test_topk_matches_whole_world_brute_force():
+    batch, forest = world()
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+    st.update(batch)
+    qe = QueryEngine(st, k=5)
+    qb = make_batch(np.asarray(batch.places)[3:9],
+                    np.asarray(batch.lengths)[3:9])
+    res = qe.query(qb)
+    want = brute_topk(st, qb.places, qb.lengths,
+                      np.full(6, 5), np.full(6, RHO, np.float32))
+    assert result_lists(res) == want
+    # result shape contract: PAD_ID / -1.0 in every unused slot
+    pad = res.match_ids == PAD_ID
+    assert np.all(res.mss[pad] == np.float32(-1.0))
+
+
+def test_ties_break_toward_smaller_row_id():
+    """Duplicate world rows score identically; the smaller id wins every
+    tie, and both duplicates appear (dedup drops copies of the same row,
+    never distinct rows with equal scores)."""
+    batch, forest = world(seed=3, n=8)
+    p = np.asarray(batch.places)
+    ln = np.asarray(batch.lengths)
+    # rows i and i+8 are identical trajectories with distinct ids
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+    st.update(make_batch(np.concatenate([p, p]), np.concatenate([ln, ln])))
+    qe = QueryEngine(st, k=6)
+    res = qe.query(make_batch(p[:4], ln[:4]))
+    want = brute_topk(st, p[:4], ln[:4],
+                      np.full(4, 6), np.full(4, RHO, np.float32))
+    got = result_lists(res)
+    assert got == want
+    for q in range(4):
+        # the query's own duplicate pair (q, q+8) ties at the top with
+        # the smaller id first
+        top = [r for r, _ in got[q][:2]]
+        assert top == [q, q + 8], got[q]
+
+
+def test_k_exceeding_world_and_per_query_k_rho():
+    batch, forest = world(n=10)
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+    st.update(batch)
+    qe = QueryEngine(st, k=3)
+    qp = np.asarray(batch.places)[:4]
+    ql = np.asarray(batch.lengths)[:4]
+    k_vec = np.array([50, 0, 1, 3])        # k > |world|, k = 0, mixed
+    rho_vec = np.array([RHO, RHO, 1e9, 0.5], np.float32)  # unmatchable rho
+    res = qe.query(make_batch(qp, ql), k=k_vec, rho=rho_vec)
+    want = brute_topk(st, qp, ql, k_vec, rho_vec)
+    assert result_lists(res) == want
+    assert want[0]                       # k=50 returns everything above rho
+    assert want[1] == [] and want[2] == []
+    # padded width is max(k_vec); rows with smaller k are PAD beyond it
+    assert res.match_ids.shape == (4, 50)
+    assert np.all(res.match_ids[1] == PAD_ID)
+    assert np.all(res.match_ids[3][3:] == PAD_ID)
+
+
+def test_empty_and_keyless_queries():
+    batch, forest = world(n=12)
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+    st.update(batch)
+    qe = QueryEngine(st, k=3)
+    # zero queries
+    res = qe.query(make_batch(np.zeros((0, 4), np.int32),
+                              np.zeros((0,), np.int32)))
+    assert res.match_ids.shape[0] == 0
+    # a keyless (zero-length) query mixed with normal ones: it gets no
+    # candidates and an all-PAD row, the others are unaffected
+    qp = np.asarray(batch.places)[:3].copy()
+    ql = np.asarray(batch.lengths)[:3].copy()
+    qp[1] = 0
+    ql[1] = 0
+    res = qe.query(make_batch(qp, ql))
+    want = brute_topk(st, qp, ql, np.full(3, 3),
+                      np.full(3, RHO, np.float32))
+    assert result_lists(res) == want
+    assert want[1] == []
+    # all queries keyless: the early path, still well-shaped
+    res = qe.query(make_batch(np.zeros((2, 4), np.int32),
+                              np.zeros((2,), np.int32)))
+    assert np.all(res.match_ids == PAD_ID)
+
+
+def test_queries_interleave_with_updates_and_never_mutate():
+    """Queries are read-only: the bucket index is never inserted into,
+    stream state is untouched, and update -> query -> update -> query
+    sees exactly the world as of each call."""
+    import repro.core.stream_index as stream_index
+
+    batch, forest = world(n=20)
+    p = np.asarray(batch.places)
+    ln = np.asarray(batch.lengths)
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+    st.update(make_batch(p[:12], ln[:12]))
+    qe = QueryEngine(st, k=4)
+    qb = make_batch(p[2:6], ln[2:6])
+
+    inserts = []
+    real = stream_index.BucketIndex.insert
+    stream_index.BucketIndex.insert = \
+        lambda self, *a, **kw: (inserts.append(1), real(self, *a, **kw))[1]
+    try:
+        before = (st.n, st._index.num_rows, st._index.pairs_examined_total)
+        res1 = qe.query(qb)
+        assert not inserts       # probe only, never insert
+        assert (st.n, st._index.num_rows,
+                st._index.pairs_examined_total) == before
+        assert result_lists(res1) == brute_topk(
+            st, qb.places, qb.lengths, np.full(4, 4),
+            np.full(4, RHO, np.float32))
+        st.update(make_batch(p[12:], ln[12:]))   # world grows
+        assert len(inserts) == 1
+        res2 = qe.query(qb)
+        assert result_lists(res2) == brute_topk(
+            st, qb.places, qb.lengths, np.full(4, 4),
+            np.full(4, RHO, np.float32))
+        assert res2.stats["world_size"] == 20
+    finally:
+        stream_index.BucketIndex.insert = real
+
+
+def test_prune_never_changes_results_and_really_skips():
+    """A world engineered so shard 0 holds the only long rows (ids = 0
+    mod 8 are long for every shard count in {1,2,4,8}): with k=1 a query
+    identical to a long row saturates its kth-best on the first (longest)
+    shard and every other shard's length bound is hopeless — skipped
+    without scoring, results identical."""
+    from repro.core.types import PAD_PLACE
+
+    rng = np.random.default_rng(0)
+    _, forest = world()
+    n, Llong, Lshort = 24, 8, 3
+    places = rng.integers(0, 30, size=(n, Llong)).astype(np.int32)
+    lengths = np.full((n,), Lshort, np.int32)
+    lengths[::8] = Llong
+    places = np.where(np.arange(Llong)[None, :] < lengths[:, None],
+                      places, PAD_PLACE)
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+    st.update(make_batch(places, lengths))
+    qb = make_batch(places[8:9], lengths[8:9])  # == resident long row 8
+    plain = QueryEngine(st, k=1, serve_prune=False).query(qb)
+    pruned = QueryEngine(st, k=1, serve_prune=True).query(qb)
+    assert result_lists(plain) == result_lists(pruned)
+    assert np.array_equal(plain.match_ids, pruned.match_ids)
+    assert np.array_equal(plain.mss, pruned.mss)
+    assert pruned.stats["rounds_run"] >= 1
+    # single device = one world shard: nothing to skip here; the
+    # multi-shard skip proof runs in the subprocess matrix below
+    assert plain.stats["rounds_skipped"] == 0
+
+
+def test_local_topk_matches_numpy_reference():
+    """Property test for the in-mesh segmented top-k primitive against a
+    plain numpy reference, including duplicates, ties and overfull runs."""
+    from repro.api.serving import _local_topk
+
+    rng = np.random.default_rng(1)
+    q_cap, k_cap, m = 8, 4, 64
+    for trial in range(5):
+        qid = rng.integers(0, q_cap, size=m).astype(np.int32)
+        row = rng.integers(0, 10, size=m).astype(np.int32)
+        mss = (rng.integers(0, 5, size=m) / 2.0).astype(np.float32)
+        pad = rng.random(m) < 0.3
+        row[pad] = PAD_ID
+        rho = np.full(q_cap, 0.4, np.float32)
+        # duplicates of the same (qid, row) must carry the same score
+        key = qid.astype(np.int64) * 1000 + row
+        uniq, first = np.unique(key, return_index=True)
+        mss = mss[first][np.searchsorted(uniq, key)]
+        t_row, t_neg = _local_topk(
+            jnp.asarray(qid), jnp.asarray(row), jnp.asarray(mss),
+            q_cap=q_cap, k_cap=k_cap, rho_vec=jnp.asarray(rho),
+        )
+        t_row, t_neg = np.asarray(t_row), np.asarray(t_neg)
+        for q in range(q_cap):
+            cand = {int(r): float(s) for qi, r, s in zip(qid, row, mss)
+                    if qi == q and r != PAD_ID and s > rho[q]}
+            want = sorted(cand.items(), key=lambda kv: (-kv[1], kv[0]))
+            want = want[:k_cap]
+            got = [(int(r), float(-s)) for r, s in zip(t_row[q], t_neg[q])
+                   if r != PAD_ID]
+            assert got == want, (trial, q, got, want)
+
+
+# ---------------------------------------------------------------------------
+# the serving matrix + zero-recompile proofs (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+SERVE_MATRIX_CODE = r"""
+import numpy as np
+import jax.numpy as jnp
+from repro.api import EngineConfig, ExecutionPlan, QueryEngine, StreamingEngine
+from repro.core.encoding import encode_codes
+from repro.core.similarity import mss_scores, multi_level_lcs
+from repro.core.types import PAD_ID, PAD_PLACE, TrajectoryBatch
+from repro.data import synthetic_setup
+
+RHO = 1.0
+batch, forest = synthetic_setup(24, num_types=5, classes_per_type=3,
+                                num_places=30, min_len=2, max_len=8, seed=0)
+P = np.asarray(batch.places); Ln = np.asarray(batch.lengths)
+# shard 0 keeps the only long rows for every shard count in {1,2,4,8};
+# keep the PAD-beyond-length invariant every data source maintains
+rng0 = np.random.default_rng(5)
+P = np.where(P == PAD_PLACE, rng0.integers(0, 30, P.shape), P)
+Ln = np.minimum(Ln, 4); Ln[::8] = P.shape[1]
+P = np.where(np.arange(P.shape[1])[None, :] < Ln[:, None], P, PAD_PLACE)
+P = P.astype(np.int32)
+
+def mk(p, l):
+    return TrajectoryBatch(places=jnp.asarray(p.astype(np.int32)),
+                           lengths=jnp.asarray(l.astype(np.int32)),
+                           user_id=jnp.arange(p.shape[0], dtype=jnp.int32))
+
+qp, ql = P[6:12], Ln[6:12]
+
+def brute(st, k):
+    n = st.n
+    codes = np.asarray(encode_codes(jnp.asarray(P[:n]), st.tables))
+    cl = np.sum(codes[:, 0, :] >= 0, -1)
+    qc = np.asarray(encode_codes(jnp.asarray(qp), st.tables))
+    out = []
+    for q in range(qp.shape[0]):
+        lvl = multi_level_lcs(jnp.asarray(np.repeat(qc[q:q+1], n, 0)),
+                              jnp.asarray(np.repeat(ql[q:q+1], n)),
+                              jnp.asarray(codes), jnp.asarray(cl))
+        mss = np.asarray(mss_scores(lvl, st.betas))
+        order = sorted(range(n), key=lambda r: (-mss[r], r))
+        out.append([(r, np.float32(mss[r])) for r in order
+                    if mss[r] > RHO][:k])
+    return out
+
+def lists(res):
+    return [[(int(r), m) for r, m in zip(ids, mss) if r != PAD_ID]
+            for ids, mss in zip(res.match_ids, res.mss)]
+
+ref = {}
+for impl in ("wavefront", "fused-interpret"):
+    cfg = EngineConfig(rho=RHO, k=1, lcs_impl=impl)
+    for dj in ("host", "device"):
+        for S in (1, 2, 4, 8):
+            for prune in (False, True):
+                st = StreamingEngine(
+                    forest, cfg, ExecutionPlan(n_shards=S, delta_join=dj))
+                st.update(mk(P[:16], Ln[:16]))
+                qe = QueryEngine(st, k=3, serve_prune=prune)
+                res = qe.query(mk(qp, ql))
+                cell = (impl, dj, S, prune)
+                if ("ids", impl) not in ref:
+                    assert lists(res) == brute(st, 3), cell
+                    ref[("ids", impl)] = res.match_ids
+                    ref[("mss", impl)] = res.mss
+                # bit-identical across delta_join x shards x prune
+                assert np.array_equal(res.match_ids, ref[("ids", impl)]), cell
+                assert np.array_equal(res.mss, ref[("mss", impl)]), cell
+                # interleaved update, then query the grown world
+                st.update(mk(P[16:], Ln[16:]))
+                res2 = qe.query(mk(qp, ql))
+                if ("ids2", impl) not in ref:
+                    assert lists(res2) == brute(st, 3), cell
+                    ref[("ids2", impl)] = res2.match_ids
+                    ref[("mss2", impl)] = res2.mss
+                assert np.array_equal(res2.match_ids, ref[("ids2", impl)]), cell
+                assert np.array_equal(res2.mss, ref[("mss2", impl)]), cell
+
+# scores agree bit-exactly ACROSS impls too (integer LCS + one epilogue)
+assert np.array_equal(ref[("mss", "wavefront")],
+                      ref[("mss", "fused-interpret")])
+
+# the engineered skip: query = the long resident row 8 with k=1; every
+# shard but the long one is hopeless once its kth-best saturates
+for S in (2, 4, 8):
+    st = StreamingEngine(forest, EngineConfig(rho=RHO, k=1),
+                         ExecutionPlan(n_shards=S))
+    st.update(mk(P, Ln))
+    qb = mk(P[8:9], Ln[8:9])
+    plain = QueryEngine(st, k=1, serve_prune=False).query(qb)
+    pruned = QueryEngine(st, k=1, serve_prune=True).query(qb)
+    assert np.array_equal(plain.match_ids, pruned.match_ids), S
+    assert np.array_equal(plain.mss, pruned.mss), S
+    assert pruned.stats["rounds_skipped"] >= S - 1, (S, pruned.stats)
+    assert pruned.stats["rounds_run"] <= 1 + (S
+        - pruned.stats["rounds_skipped"]), (S, pruned.stats)
+print("OK serve matrix")
+"""
+
+
+def test_serving_matrix():
+    """The ISSUE 6 acceptance matrix: {host, device} x {1, 2, 4, 8}
+    shards x {wavefront, fused-interpret} x {prune on/off} serve
+    bit-identical top-k results, equal to whole-world brute force, with
+    interleaved updates — plus a real per-shard skip proof."""
+    out = run_subprocess(SERVE_MATRIX_CODE, devices=8)
+    assert "OK serve matrix" in out
+
+
+SERVE_RECOMPILE_CODE = r"""
+import numpy as np
+import jax.numpy as jnp
+from repro.api import EngineConfig, ExecutionPlan, QueryEngine, StreamingEngine
+from repro.core.types import TrajectoryBatch
+from repro.data import synthetic_setup
+
+batch, forest = synthetic_setup(32, num_types=5, classes_per_type=3,
+                                num_places=30, min_len=4, max_len=8, seed=2)
+P = np.asarray(batch.places); Ln = np.asarray(batch.lengths)
+
+def mk(p, l):
+    return TrajectoryBatch(places=jnp.asarray(p.astype(np.int32)),
+                           lengths=jnp.asarray(l.astype(np.int32)),
+                           user_id=jnp.arange(p.shape[0], dtype=np.int32))
+
+rng = np.random.default_rng(7)
+sels = [rng.integers(0, P.shape[0], size=4) for _ in range(12)]
+for dj in ("host", "device"):
+    st = StreamingEngine(forest, EngineConfig(rho=1.0, k=1),
+                         ExecutionPlan(n_shards=4, delta_join=dj))
+    st.update(mk(P, Ln))
+    qe = QueryEngine(st, k=3, serve_prune=True)
+    # pass 1 warms: compiles the program pair and ratchets the pow2-sticky
+    # caps up to the max any batch in the cycle needs
+    for sel in sels:
+        qe.query(mk(P[sel], Ln[sel]))
+    warm = (qe.serve_traces[0], qe.probe_traces[0])
+    # pass 2 replays the same 12 varying-content, steady-shape batches:
+    # every per-batch plan is already covered by the sticky plan, so >= 10
+    # CONSECUTIVE micro-batches reuse the pair verbatim — ZERO recompiles
+    for sel in sels:
+        res = qe.query(mk(P[sel], Ln[sel]))
+    assert warm[0] >= 1, (dj, warm)
+    assert (qe.serve_traces[0], qe.probe_traces[0]) == warm, (
+        dj, warm, qe.serve_traces, qe.probe_traces)
+    assert qe.runner_builds <= 5, (dj, qe.runner_builds)
+    # only [Q, k]-scale data plus the query batch transits the driver
+    assert res.stats["driver_bytes_in"] < 64 * 1024, res.stats
+print("OK serve recompile")
+"""
+
+
+def test_query_micro_batches_share_one_compiled_program():
+    """>= 10 consecutive query micro-batches of steady shape reuse one
+    compiled probe + score program pair (trace counters frozen across a
+    replayed batch cycle) on both the host and device index paths."""
+    out = run_subprocess(SERVE_RECOMPILE_CODE, devices=4)
+    assert "OK serve recompile" in out
+
+
+def test_device_probe_never_touches_bucket_index():
+    """Protocol dispatch proof: serving over a device-resident world goes
+    through the in-mesh probe program — the driver BucketIndex is never
+    probed — while the host path really routes through BucketIndex.probe."""
+    import repro.core.stream_index as stream_index
+
+    batch, forest = world(n=12)
+    probes = []
+    real = stream_index.BucketIndex.probe
+    stream_index.BucketIndex.probe = \
+        lambda self, *a, **kw: (probes.append(1), real(self, *a, **kw))[1]
+    try:
+        qb = make_batch(np.asarray(batch.places)[:3],
+                        np.asarray(batch.lengths)[:3])
+        dev = StreamingEngine(forest, EngineConfig(rho=RHO, k=1),
+                              ExecutionPlan(delta_join="device"))
+        dev.update(batch)
+        r_dev = QueryEngine(dev, k=3).query(qb)
+        assert not probes
+        host = StreamingEngine(forest, EngineConfig(rho=RHO, k=1))
+        host.update(batch)
+        r_host = QueryEngine(host, k=3).query(qb)
+        assert len(probes) == 1
+        assert np.array_equal(r_dev.match_ids, r_host.match_ids)
+        assert np.array_equal(r_dev.mss, r_host.mss)
+    finally:
+        stream_index.BucketIndex.probe = real

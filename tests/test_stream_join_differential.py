@@ -214,6 +214,60 @@ def test_device_join_differential(backend, schedule):
     assert rh.stats["full_world_pairs"] == full
 
 
+SCORE_CAP_CODE = r"""
+import numpy as np
+import jax.numpy as jnp
+from repro.api import EngineConfig, ExecutionPlan, StreamingEngine
+from repro.core.types import TrajectoryBatch
+from repro.data import synthetic_setup
+
+base, forest = synthetic_setup(5, num_types=5, classes_per_type=3,
+                               num_places=30, min_len=3, max_len=6, seed=0)
+p = np.asarray(base.places); ln = np.asarray(base.lengths)
+places = np.concatenate([p, p[:2], p, p[4:]])
+lengths = np.concatenate([ln, ln[:2], ln, ln[4:]])
+
+def mk(lo, hi):
+    return TrajectoryBatch(
+        places=jnp.asarray(places[lo:hi].astype(np.int32)),
+        lengths=jnp.asarray(lengths[lo:hi].astype(np.int32)),
+        user_id=jnp.arange(hi - lo, dtype=jnp.int32),
+    )
+
+cuts = [0, 4, 7, 12, places.shape[0]]
+cfg = EngineConfig(rho=2.0, community_mode="components")
+for n_shards in (1, 2):
+    st = StreamingEngine(
+        forest, cfg, ExecutionPlan(n_shards=n_shards, delta_join="device"))
+    caps = []
+    for lo, hi in zip(cuts, cuts[1:]):
+        res = st.update(mk(lo, hi))
+        caps.append((res.stats["score_pair_cap"],
+                     res.stats["join_pair_cap"]))
+    # the score cap never exceeds the join emission cap, both are
+    # pow2-sticky (monotone), ...
+    for sc, jc in caps:
+        assert sc <= jc, caps
+    assert [c[0] for c in caps] == sorted(c[0] for c in caps), caps
+    assert [c[1] for c in caps] == sorted(c[1] for c in caps), caps
+    # ...and on this schedule (identical rows sharing MANY keys, so each
+    # pair is emitted once per shared key pre-dedup) the final score cap
+    # is strictly tighter
+    assert caps[-1][0] < caps[-1][1], (n_shards, caps)
+print("OK score cap")
+"""
+
+
+def test_device_join_score_cap_is_post_dedup():
+    """The score stage's pair buffer is sized from the POST-dedup
+    candidate count (the in-mesh pmax of per-shard dedup survivors), not
+    the join stage's pre-dedup emission bound — on duplicate-heavy
+    streams the two diverge and the score program must compile against
+    the tighter cap."""
+    out = run_subprocess(SCORE_CAP_CODE, devices=2)
+    assert "OK score cap" in out
+
+
 def test_device_join_prune_differential():
     """score_prune runs IN-MESH on the device path (the pairs never visit
     the host to be pruned there) and must keep the surviving scored set
