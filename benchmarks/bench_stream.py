@@ -37,10 +37,23 @@ occurrences shipped into the in-mesh join — nonzero only on the device
 path) and ``host_index_entries`` (world-key state resident on the
 driver's ``BucketIndex`` — nonzero only on the host path).
 
-JSON schema (``schema: bench_stream/v2``)::
+Bounded-memory evidence (schema v3): each cell additionally streams the
+SAME pieces through a sliding-window engine (``window=W`` updates, no
+preallocated world — capacity starts at zero and must PLATEAU instead of
+growing with total ingested rows).  Per update the windowed sections
+record ``resident_bytes`` (device-resident world + slab bytes, the
+quantity ``max_resident_bytes`` bounds), ``world_live``,
+``dead_fraction`` (tombstones awaiting compaction) and ``num_expired``;
+per run they record ``compactions``, ``compact_ms_total`` and
+``compact_stall_ms_max`` (the worst single-update wall that absorbed a
+compaction — the graceful-degradation latency spike).
+``resident_bounded`` is the boundedness proof: after a ``2 * W``-update
+warm-up the resident-byte series never exceeds its warm-up peak.
+
+JSON schema (``schema: bench_stream/v3``)::
 
     {
-      "schema": "bench_stream/v2",
+      "schema": "bench_stream/v3",
       "backend": "cpu" | "tpu" | ...,
       "jax_version": "...",
       "smoke": bool,
@@ -56,6 +69,15 @@ JSON schema (``schema: bench_stream/v2``)::
                     "host_index_entries": int,
                     "mean_driver_bytes_in": float},
          "stream_device": {... same fields, "delta_join": "device" ...},
+         "windowed": {"window": int, "delta_join": "host",
+                      "update_wall_s": [...], "mean_update_s": float,
+                      "resident_bytes": [...], "world_live": [...],
+                      "dead_fraction": [...], "num_expired": [...],
+                      "retired_total": int, "compactions": int,
+                      "compact_ms_total": float,
+                      "compact_stall_ms_max": float,
+                      "resident_bounded": bool},
+         "windowed_device": {... same fields, "delta_join": "device" ...},
          "oneshot": {"update_wall_s": [...], "updates_per_sec": float,
                      "mean_update_s": float},
          "stream_vs_oneshot": float,
@@ -152,6 +174,53 @@ def _stream_run(forest, cfg, pieces, N, delta_join):
     return s
 
 
+def _windowed_run(forest, cfg, pieces, delta_join, window):
+    """Sliding-window stream over the same pieces: the bounded-memory
+    evidence run.  No preallocated capacity — the resident footprint has
+    to plateau on its own once expiry + compaction reach steady state."""
+    from repro.api import ExecutionPlan, StreamingEngine
+
+    stream = StreamingEngine(
+        forest, cfg, ExecutionPlan(delta_join=delta_join), window=window,
+    )
+    walls, rb, live, dead, expired = [], [], [], [], []
+    stall_ms = 0.0
+    seen_compactions = 0
+    for piece in pieces:
+        t0 = time.perf_counter()
+        res = stream.update(piece)
+        w = time.perf_counter() - t0
+        walls.append(w)
+        st = res.stats
+        rb.append(int(st["resident_bytes"]))
+        live.append(int(st["world_live"]))
+        dead.append(float(st["dead_fraction"]))
+        expired.append(int(st["num_expired"]))
+        if stream.compactions > seen_compactions:
+            # this update absorbed >= 1 compaction: its whole wall is the
+            # worst-case stall an operator would observe
+            stall_ms = max(stall_ms, w * 1e3)
+            seen_compactions = stream.compactions
+    warm = 2 * window
+    tail = rb[warm:]
+    bounded = (max(tail) <= max(rb[: warm + 1])) if tail else True
+    return {
+        "window": window,
+        "delta_join": delta_join,
+        "update_wall_s": [round(w, 6) for w in walls],
+        "mean_update_s": round(float(np.mean(walls)), 6),
+        "resident_bytes": rb,
+        "world_live": live,
+        "dead_fraction": [round(x, 4) for x in dead],
+        "num_expired": expired,
+        "retired_total": stream.retired_total,
+        "compactions": stream.compactions,
+        "compact_ms_total": round(stream.compact_ms_total, 3),
+        "compact_stall_ms_max": round(stall_ms, 3),
+        "resident_bounded": bounded,
+    }
+
+
 def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
     """One grid cell: stream the world in ``updates`` micro-batches over
     BOTH delta-join paths and re-run one-shot over every prefix; returns
@@ -168,6 +237,9 @@ def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
 
     s = _stream_run(forest, cfg, pieces, N, "host")
     dev = _stream_run(forest, cfg, pieces, N, "device")
+    window = max(1, updates // 4)
+    win = _windowed_run(forest, cfg, pieces, "host", window)
+    win_dev = _windowed_run(forest, cfg, pieces, "device", window)
 
     engine = AnotherMeEngine(forest, cfg)
     o_walls = []
@@ -184,7 +256,8 @@ def bench_cell(N, updates, *, backend="ssh", rho=2.0, seed=0):
     return {
         "N": N, "updates": updates, "batch": N // updates,
         "backend": backend,
-        "stream": s, "stream_device": dev, "oneshot": o,
+        "stream": s, "stream_device": dev,
+        "windowed": win, "windowed_device": win_dev, "oneshot": o,
         "stream_vs_oneshot": round(
             o["mean_update_s"] / max(s["mean_update_s"], 1e-9), 3
         ),
@@ -210,7 +283,7 @@ def _grid(smoke, full):
 def bench(*, smoke=False, full=False, out_path=None):
     grids = [bench_cell(N, u) for N, u in _grid(smoke, full)]
     report = {
-        "schema": "bench_stream/v2",
+        "schema": "bench_stream/v3",
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "smoke": bool(smoke),
@@ -245,6 +318,16 @@ def run(full: bool = False, smoke: bool | None = None):
             f"{cell['stream_device']['mean_driver_bytes_in']:.0f} B/upd, "
             f"x{cell['device_driver_bytes_vs_host']} bytes vs host]",
         )
+        win = cell["windowed_device"]
+        yield Row(
+            f"bench_stream/windowed_device/{tag}",
+            win["mean_update_s"] * 1e6,
+            f"W={win['window']} "
+            f"[bounded={win['resident_bounded']}, "
+            f"{max(win['resident_bytes'])} B peak, "
+            f"{win['compactions']} compactions, "
+            f"stall<={win['compact_stall_ms_max']:.1f} ms]",
+        )
         yield Row(
             f"bench_stream/oneshot/{tag}",
             cell["oneshot"]["mean_update_s"] * 1e6,
@@ -273,6 +356,14 @@ def main():
               f"oneshot {o['mean_update_s']*1e3:8.2f} ms/upd "
               f"x{cell['stream_vs_oneshot']:<7} "
               f"delta_only={s['delta_only'] and d['delta_only']}")
+        for key in ("windowed", "windowed_device"):
+            w = cell[key]
+            print(f"  {key:<16s} W={w['window']:<3d} "
+                  f"{w['mean_update_s']*1e3:8.2f} ms/upd "
+                  f"resident<= {max(w['resident_bytes']):9d} B "
+                  f"bounded={w['resident_bounded']} "
+                  f"compactions={w['compactions']} "
+                  f"stall<={w['compact_stall_ms_max']:.1f} ms")
     print(f"wrote {args.out}")
 
 

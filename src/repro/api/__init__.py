@@ -21,6 +21,9 @@ Components (all replaceable independently):
       QueryEngine(stream).query(batch) probes the resident index read-only
       and returns per-query top-k (match id, mss) without mutating the world
   CapacityPlanner                                  buffer sizing + overflow retry
+  CapacityExceeded                                 typed admission refusal: an
+      update/query over the max_resident_bytes budget (or past the retry
+      doublings) is refused with the world state untouched
   Instrumentation                                  phase timing/stats wrapper
   make_sharded_pipeline / plan_capacities / DistributedPlan
       the shard_map building blocks (for dry-runs and custom meshes)
@@ -37,6 +40,7 @@ from repro.api.capacity import CapacityPlanner
 from repro.api.engine import (
     AnotherMeEngine, EngineConfig, EngineResult, ExecutionPlan,
 )
+from repro.api.errors import CapacityExceeded
 from repro.api.instrumentation import Instrumentation
 from repro.api.sharded import (
     DistributedPlan, StreamJoinPlan, StreamShardPlan, gather_similar_pairs,

@@ -1,0 +1,30 @@
+"""Typed capacity errors: admission control for streaming/serving.
+
+Fixed-shape buffers turn "out of memory" from a crash into a plannable
+event: every stage knows, before it runs, how much capacity a retry
+doubling would allocate.  :class:`CapacityExceeded` is the typed refusal —
+raised when a single update/query cannot fit within ``max_retries``
+doublings or the engine's ``max_resident_bytes`` budget, WITHOUT mutating
+the world state, so the caller can shed load / widen the budget / retire
+rows and re-submit the same batch.
+
+It subclasses ``RuntimeError`` so pre-existing ``except RuntimeError``
+overflow handling keeps working.
+"""
+from __future__ import annotations
+
+
+class CapacityExceeded(RuntimeError):
+    """A single update/query exceeded its capacity budget and was refused.
+
+    Attributes:
+        needed_bytes:  resident bytes the operation would have required
+                       (0 when the refusal is retry-count based).
+        budget_bytes:  the configured ``max_resident_bytes`` (0 = retries).
+    """
+
+    def __init__(self, message: str, *, needed_bytes: int = 0,
+                 budget_bytes: int = 0):
+        super().__init__(message)
+        self.needed_bytes = int(needed_bytes)
+        self.budget_bytes = int(budget_bytes)

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.errors import CapacityExceeded
 from repro.api.sharded import (
     _positive_hash, _positive_hash_np, _pow2, _route,
 )
@@ -499,6 +500,10 @@ class _HostProber:
         e = self.engine
         S, cap = qplan.n_shards, qplan.cand_cap
         qidx, rows = pre["qidx"], pre["rows"]
+        # the BucketIndex speaks global ids; the score program gathers
+        # world slots by LOCAL index (slot = id - base), so translate
+        # before shipping — query() adds the base back to the results
+        rows = rows - np.int32(e.stream._base)
         total = int(qidx.shape[0])
         buf_r = np.full((S, cap), PAD_ID, np.int32)
         buf_q = np.full((S, cap), PAD_ID, np.int32)
@@ -560,6 +565,15 @@ class _SlabProber:
                 qplan, cand_cap=qplan.cand_cap * 2,
                 key_route_cap=qplan.key_route_cap * 2,
             )
+        if int(np.asarray(out["overflow"]).sum()):
+            # a truncated candidate list would silently drop matches —
+            # refuse the query instead (typed, so callers can shed load)
+            raise CapacityExceeded(
+                "query probe still overflowed after "
+                f"{e.planner.max_retries} retries (per-shard overflow "
+                f"{np.asarray(out['overflow']).tolist()}); refusing to "
+                "serve a truncated candidate set"
+            )
         stats = {
             "candidates": int(np.asarray(out["count"]).sum()),
             "probe_examined": int(np.asarray(out["examined"]).sum()),
@@ -613,6 +627,7 @@ class QueryEngine:
         self.runner_builds = 0
         self.queries_served = 0
         self._qplan: QueryPlan | None = None
+        self._compactions_seen = stream.compactions
         self._runner_cache: dict = {}
         self._probe_cache: dict = {}
         self._xfer_bytes = 0
@@ -649,8 +664,15 @@ class QueryEngine:
         ).copy()
         k_max = int(k_vec.max()) if Q else 0
         self._xfer_bytes = 0
+        # the sticky plan may shrink ONLY at a compaction boundary — the
+        # serving analogue of the streaming shrink rule (between
+        # boundaries caps are monotone, so traffic never recompiles)
+        if self.stream.compactions != self._compactions_seen:
+            self._qplan = None
+            self._compactions_seen = self.stream.compactions
         stats = {
-            "queries": Q, "world_size": self.stream.n, "candidates": 0,
+            "queries": Q, "world_size": self.stream.n,
+            "world_live": self.stream.live_size, "candidates": 0,
             "probe_examined": 0, "rounds_run": 0, "rounds_skipped": 0,
             "cells_skipped": 0,
         }
@@ -700,6 +722,9 @@ class QueryEngine:
         neg = negs_np[:, :k_max] if k_max else negs_np[:, :0]
         mss = np.where(ids != PAD_ID, -neg, NO_MATCH_MSS) \
             .astype(np.float32)
+        # device programs speak local slots; matches surface as global ids
+        ids = np.where(ids != PAD_ID, ids + np.int32(self.stream._base),
+                       PAD_ID)
         return self._finish_result(ids.copy(), mss, k_vec, k_max, stats)
 
     # -- internals -----------------------------------------------------------

@@ -49,11 +49,14 @@ over the concatenation, on the single-device and sharded paths alike.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.engine import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.api.errors import CapacityExceeded
 from repro.api.instrumentation import Instrumentation
 from repro.api.sharded import (
     StreamShardPlan, _positive_hash_np, _pow2, make_streaming_join_pipeline,
@@ -62,7 +65,9 @@ from repro.api.sharded import (
 )
 from repro.api.stages import _KERNEL_MODES, _score_with_kernel
 from repro.core import communities as comm
-from repro.core.device_index import ShardSummaries, StreamJoinStats
+from repro.core.device_index import (
+    ShardSummaries, StreamJoinStats, compact_slab, mark_dead_rows,
+)
 from repro.core.encoding import encode_codes, encode_types
 from repro.core.pipeline import AnotherMeResult as EngineResult
 from repro.core.similarity import (
@@ -75,6 +80,24 @@ from repro.core.types import (
 
 COMPONENTS_IMPLS = ("unionfind", "jit")
 DELTA_JOINS = ("host", "device")
+
+# a row with no TTL never expires on its own
+NEVER_EXPIRES = np.iinfo(np.int64).max
+
+# REPRO_FAULT_INJECT=1 derates every fresh join/score plan to artificially
+# tiny caps, forcing the overflow -> compact -> retry recovery path on
+# every run (CI exercises it deterministically; results stay bit-identical
+# because overflowed runs are never committed).  Read per-call so tests
+# can flip it with monkeypatch.setenv.
+def _fault_inject() -> bool:
+    return bool(int(os.environ.get("REPRO_FAULT_INJECT", "0") or "0"))
+
+
+def _derate_cap(cap: int) -> int:
+    """Fault-injection derating: shrink a planned capacity hard enough to
+    force overflow retries, but keep it a power of two >= 4 so the retry
+    doubling converges within the extra fault-injection retry budget."""
+    return max(4, _pow2(max(cap // 8, 1)))
 
 
 class StreamingEngine:
@@ -104,6 +127,9 @@ class StreamingEngine:
         components_impl: str = "unionfind",
         world_capacity: int | None = None,
         join_slab_capacity: int | None = None,
+        window: int | None = None,
+        max_resident_bytes: int | None = None,
+        compact_watermark: float = 0.5,
     ):
         if components_impl not in COMPONENTS_IMPLS:
             raise ValueError(
@@ -130,9 +156,30 @@ class StreamingEngine:
         H = int(self.tables.shape[0])
         self._H = H
         # world state (global-order host mirror + device-resident tables)
-        self.n = 0               # trajectories arrived
+        self.n = 0               # trajectories arrived (global ids 0..n-1)
         self.L = 1               # world max trajectory length (grows)
         self._cap = 0            # world buffer capacity (amortized doubling)
+        # bounded-memory state: the resident buffers hold ONLY the id
+        # window [base, n) — slot i is global id base + i.  ``base`` only
+        # moves at compaction (prefix rebase: every id below it is dead),
+        # and is kept a multiple of n_shards so the round-robin owner
+        # ``g % n_shards`` is invariant under the shift — device programs
+        # operate on LOCAL ids (g - base) and never see the base move.
+        self._base = 0
+        self._alive_np = np.zeros((0,), bool)     # [cap] liveness, local
+        self._expiry_np = np.zeros((0,), np.int64)  # [cap] expiry update
+        if window is not None and window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
+        self.window = window
+        self.max_resident_bytes = max_resident_bytes
+        if not (0.0 < compact_watermark <= 1.0):
+            raise ValueError(
+                f"compact_watermark must be in (0, 1], got {compact_watermark}"
+            )
+        self.compact_watermark = float(compact_watermark)
+        self.retired_total = 0   # rows ever retired (TTL + explicit)
+        self.compactions = 0     # watermark compactions run
+        self.compact_ms_total = 0.0  # cumulative compaction stall latency
         self._cap_floor = max(16, int(world_capacity or 0))  # preallocation
         #   hint: a caller expecting ~N trajectories passes world_capacity=N
         #   so the world buffers never reallocate (and the world-shaped
@@ -198,8 +245,15 @@ class StreamingEngine:
 
     # -- public entry points -------------------------------------------------
 
-    def update(self, batch: TrajectoryBatch) -> EngineResult:
-        """Ingest one micro-batch; return the current world's result."""
+    def update(self, batch: TrajectoryBatch,
+               *, ttl: int | None = None) -> EngineResult:
+        """Ingest one micro-batch; return the current world's result.
+
+        ttl: updates this batch's rows stay resident for (they are
+        retired at the start of the ``ttl``-th subsequent update).  The
+        engine-level ``window=N`` acts as a ceiling: rows expire after
+        ``min(ttl, window)`` updates when both are set.
+        """
         instr = Instrumentation()
         self._xfer = {"bytes_in": 0, "pair_rows": 0, "key_rows": 0}
         places = np.asarray(batch.places, np.int32)
@@ -208,12 +262,21 @@ class StreamingEngine:
                                     else (0, 1))
         lengths = np.asarray(batch.lengths, np.int32).reshape(-1)
         d = places.shape[0]
+        # sliding-window / TTL sweep FIRST: rows whose window closed must
+        # be gone before this update's rows arrive, so an expiring row
+        # never pairs with a new one — exactly the one-shot-over-the-
+        # window semantics the differential harness pins
+        with instr.phase("expire"):
+            num_expired = self._expire_due()
+        with instr.phase("keys"):
+            keys_np = self._new_row_keys(places, lengths) if d else None
+        # admission control BEFORE any mutation: if this update cannot fit
+        # the resident-byte budget, refuse it with the world untouched
+        self._admission_check(d, places.shape[1] if d else 0, keys_np)
         n_old = self.n
         with instr.phase("ingest"):
             if d:
-                self._ingest(places, lengths)
-        with instr.phase("keys"):
-            keys_np = self._new_row_keys(places, lengths) if d else None
+                self._ingest(places, lengths, ttl=ttl)
         num_pruned = 0
         if self.delta_join == "device":
             with instr.phase("delta_join"):
@@ -260,6 +323,16 @@ class StreamingEngine:
         self._examined_total += int(examined)
         instr.record(
             num_new=d, world_size=self.n, world_capacity=self._cap,
+            # bounded-memory accounting: the live row count, the resident
+            # device footprint, the tombstone fraction awaiting
+            # compaction, and the compaction history (count + cumulative
+            # stall latency) — the BENCH_stream v3 columns
+            world_live=self.live_size, world_base=self._base,
+            num_expired=num_expired, retired_total=self.retired_total,
+            resident_bytes=self.resident_bytes(),
+            dead_fraction=self.dead_fraction(),
+            compactions=self.compactions,
+            compact_ms_total=self.compact_ms_total,
             pairs_examined=examined, full_world_pairs=self._examined_total,
             num_delta_pairs=num_delta, num_candidates=self._acc_n,
             num_similar=len(self.similar_pairs),
@@ -314,14 +387,399 @@ class StreamingEngine:
     def world_size(self) -> int:
         return self.n
 
+    @property
+    def live_size(self) -> int:
+        """Trajectories currently resident and alive."""
+        return int(self._alive_np[: self.n - self._base].sum())
+
+    # -- bounded memory: retirement, tombstones, compaction ------------------
+
+    def retire(self, ids) -> int:
+        """Retire trajectories by global id; returns how many were live.
+
+        Retired rows leave the logical world immediately: they stop
+        emitting candidate pairs (slab tombstones / host bucket eviction),
+        their accumulated scored pairs and similarity edges are purged,
+        and their communities un-merge — the engine's result equals a
+        one-shot run over the surviving rows.  PHYSICAL reclamation is
+        deferred: tombstones occupy their slab slots until the dead
+        fraction trips ``compact_watermark`` and a compaction repacks the
+        resident state.  Already-retired (or already-compacted-away) ids
+        are ignored, so the call is idempotent.
+        """
+        req = sorted({int(i) for i in np.asarray(
+            list(ids), dtype=np.int64).reshape(-1).tolist()})
+        for i in req:
+            if i < 0 or i >= self.n:
+                raise ValueError(
+                    f"cannot retire id {i}: world holds ids 0..{self.n - 1}"
+                )
+        base = self._base
+        dead = [i for i in req
+                if i >= base and self._alive_np[i - base]]
+        if not dead:
+            return 0
+        self._retire(np.asarray(dead, np.int64))
+        self._maybe_compact()
+        return len(dead)
+
+    def resident_bytes(self) -> int:
+        """Bytes of device-resident world state (code/place tables +
+        join slabs) — the quantity ``max_resident_bytes`` bounds and
+        BENCH_stream v3 tracks."""
+        total = 0
+        if self._codes_dev is not None:
+            total += self._codes_dev.size * 4 + self._len_dev.size * 4
+        if self._places_dev is not None:
+            total += self._places_dev.size * 4
+        if self._slab_keys is not None:
+            total += self._slab_keys.size * 4 + self._slab_rows.size * 4
+        return int(total)
+
+    def dead_fraction(self) -> float:
+        """Tombstone fraction awaiting compaction (max of the row-level
+        fraction and, on the device join path, the per-owner slab
+        fraction — the watermark input)."""
+        span = self.n - self._base
+        frac = (span - self.live_size) / span if span else 0.0
+        if self.delta_join == "device":
+            frac = max(frac, self._join_stats.dead_fraction())
+        return float(frac)
+
+    def _resident_bytes_at(self, world_cap: int, slab_cap: int,
+                           world_L: int | None = None) -> int:
+        """Projected resident bytes at the given capacities (admission)."""
+        L = self.L if world_L is None else world_L
+        if self._mesh_world:
+            world = world_cap * L * 4
+        else:
+            world = world_cap * self._H * L * 4 + world_cap * 4
+        slab = 2 * self.plan.n_shards * slab_cap * 4 \
+            if self.delta_join == "device" else 0
+        return world + slab
+
+    def _admission_check_bytes(self, projected: int, what: str) -> None:
+        if self.max_resident_bytes is None:
+            return
+        if projected > self.max_resident_bytes:
+            raise CapacityExceeded(
+                f"{what} needs {projected} resident bytes, over the "
+                f"max_resident_bytes budget of {self.max_resident_bytes}; "
+                "the update was refused and the world is unchanged — "
+                "retire rows, raise the budget, or shrink the batch",
+                needed_bytes=projected,
+                budget_bytes=self.max_resident_bytes,
+            )
+
+    def _admission_check(self, d: int, Lb: int, keys_np) -> None:
+        """Pre-flight admission: would this update's buffer growth exceed
+        ``max_resident_bytes``?  Mirrors ``_ingest``'s growth arithmetic
+        and the join planner's slab sizing, and runs BEFORE any state
+        mutation — a refusal leaves the world bit-identical."""
+        if self.max_resident_bytes is None or not d:
+            return
+        new_L = max(self.L, Lb)
+        span = self.n - self._base
+        n_sh = self.plan.n_shards
+        new_cap = self.planner.grow_capacity(
+            max(self._cap, self._cap_floor), span + d
+        )
+        if n_sh > 1:
+            new_cap = n_sh * self.planner.grow_capacity(
+                1, -(-new_cap // n_sh)
+            )
+        slab_cap = self._slab_cap
+        if self.delta_join == "device" and keys_np is not None:
+            ks = np.sort(np.asarray(keys_np), axis=1)
+            valid = ks != PAD_KEY
+            valid[:, 1:] &= ks[:, 1:] != ks[:, :-1]
+            k_flat = ks[valid].astype(np.int32)
+            if k_flat.size:
+                jplan = self.planner.plan_stream_join(
+                    k_flat, n_sh, self._join_stats
+                )
+                slab_cap = max(slab_cap, jplan.slab_cap)
+        self._admission_check_bytes(
+            self._resident_bytes_at(new_cap, slab_cap, new_L),
+            f"ingesting {d} rows",
+        )
+
+    def _expire_due(self) -> int:
+        """Retire every live row whose TTL/window closed (expiry update
+        <= the current update index).  Runs before ingestion, so an
+        expiring row never pairs with an arriving one."""
+        span = self.n - self._base
+        if not span:
+            return 0
+        due = np.nonzero(
+            self._alive_np[:span]
+            & (self._expiry_np[:span] <= self.updates)
+        )[0]
+        if due.size == 0:
+            return 0
+        self._retire(due.astype(np.int64) + self._base)
+        self._maybe_compact()
+        return int(due.size)
+
+    def _retire(self, dead: np.ndarray) -> None:
+        """Logically delete ``dead`` (sorted global ids, all live) from
+        every layer that caches world state."""
+        base = self._base
+        dl = (dead - base).astype(np.int64)
+        self._alive_np[dl] = False
+        self.retired_total += int(dead.size)
+        # the rows' join keys are recomputed from the host mirror (keys
+        # are a pure per-row function, so they are always recoverable)
+        keys_np = self._new_row_keys(
+            self._places_np[dl], self._lengths_np[dl]
+        )
+        if self.delta_join == "device":
+            ks = np.sort(np.asarray(keys_np), axis=1)
+            valid = ks != PAD_KEY
+            valid[:, 1:] &= ks[:, 1:] != ks[:, :-1]
+            k_flat = ks[valid].astype(np.int32)
+            if k_flat.size:
+                owners = _positive_hash_np(k_flat) % self.plan.n_shards
+                self._join_stats.retire(k_flat, owners)
+            if self._slab_keys is not None:
+                # tombstone the slab in place: rows become PAD_ID, keys
+                # stay (sort order and examined accounting intact).  The
+                # dead list ships PAD-padded at a pow2 cap so repeats of
+                # similar size reuse the compiled marker
+                m_cap = self.planner.update_capacity(int(dead.size))
+                buf = np.full((m_cap,), PAD_ID, np.int32)
+                buf[: dead.size] = dl.astype(np.int32)
+                self._xfer["bytes_in"] += buf.nbytes
+                self._slab_rows = self._mark_dead_runner()(
+                    self._slab_rows, jnp.asarray(buf)
+                )
+        else:
+            self._index.retire(dead.tolist(), keys_np)
+        # purge accumulated scored pairs and similarity edges touching a
+        # dead row (the result contract: == one-shot over the survivors).
+        # The purge writes FRESH buffers — results already returned hold
+        # (possibly zero-copy) views of the old ones, and the append-only
+        # discipline that kept those views valid must survive deletion
+        if self._acc_n:
+            left = self._acc_left[: self._acc_n]
+            right = self._acc_right[: self._acc_n]
+            keep = self._alive_np[left - base] & self._alive_np[right - base]
+            k = int(keep.sum())
+            for name in ("_acc_left", "_acc_right", "_acc_lvl", "_acc_mss"):
+                old = getattr(self, name)
+                fresh = old.copy()
+                fresh[:k] = old[: self._acc_n][keep]
+                setattr(self, name, fresh)
+            self._acc_n = k
+        dead_set = set(int(i) for i in dead.tolist())
+        self.similar_pairs = {
+            (a, b) for (a, b) in self.similar_pairs
+            if a not in dead_set and b not in dead_set
+        }
+        self._unmerge_communities(dl)
+        # serve-prune summaries: a maximum cannot be maintained under
+        # deletion — recompute from the live mirror so the REPOSE bounds
+        # stay sound AND tight
+        span = self.n - base
+        self.shard_summaries.rebuild(
+            base, self._lengths_np[:span], self._alive_np[:span]
+        )
+
+    def _unmerge_communities(self, dead_local: np.ndarray) -> None:
+        """Community un-merging: deletion can SPLIT a component, which no
+        incremental label update discovers — re-solve only the components
+        that contained a dead node, warm-starting from the survivors."""
+        if self.config.community_mode == "cliques":
+            return  # cliques re-derive from similar_pairs on every fold
+        base = self._base
+        span = self.n - base
+        labels = np.arange(span, dtype=np.int32)
+        labels[: min(self._labels.shape[0], span)] = \
+            self._labels[: min(self._labels.shape[0], span)]
+        edges_local = [(a - base, b - base) for (a, b) in self.similar_pairs]
+        if self.components_impl == "unionfind":
+            self._labels = comm.components_after_deletion(
+                labels, dead_local.tolist(), edges_local
+            )
+        else:
+            # the warm-started jit path: untouched components enter as
+            # stars of their stale labels, touched ones dissolve to
+            # singletons and re-form from the surviving edges in-device
+            lab = labels.astype(np.int64)
+            touched = np.unique(lab[dead_local])
+            tmask = np.isin(lab, touched)
+            idx = np.nonzero(tmask)[0]
+            lab[idx] = idx
+            tset = set(idx.tolist())
+            delta = [e for e in edges_local
+                     if e[0] in tset or e[1] in tset]
+            cap = max(self._cap, span)
+            seed = np.arange(cap, dtype=np.int32)
+            seed[:span] = lab
+            e_cap = self.planner.update_capacity(len(delta))
+            el = np.full((e_cap,), PAD_ID, np.int32)
+            er = np.full((e_cap,), PAD_ID, np.int32)
+            for i, (a, b) in enumerate(delta):
+                el[i], er[i] = a, b
+            left = np.concatenate([seed, el])
+            right = np.concatenate([np.arange(cap, dtype=np.int32), er])
+            out = comm.connected_components(
+                jnp.asarray(left), jnp.asarray(right), num_nodes=cap,
+                init_labels=jnp.asarray(seed),
+            )
+            self._labels = np.asarray(out)[:span]
+        self._uf.reset_from_labels(self._labels)
+
+    def _maybe_compact(self) -> None:
+        if self.dead_fraction() >= self.compact_watermark:
+            self._compact()
+
+    def _compact(self) -> None:
+        """Watermark compaction: repack the resident state to the live
+        window.  The world base advances past the dead prefix (a PREFIX
+        rebase: global ids are stable, device programs see only local ids
+        and a dynamic shift, so nothing world-shaped recompiles); the
+        slabs drop every tombstone and may SHRINK — this is the one
+        boundary where capacity plans are allowed to contract, so steady
+        state between compactions stays recompile-free."""
+        t0 = time.perf_counter()
+        base = self._base
+        span = self.n - base
+        n_sh = self.plan.n_shards if self._mesh_world else 1
+        live_idx = np.nonzero(self._alive_np[:span])[0]
+        # the base stays a multiple of n_shards so round-robin owners are
+        # invariant under the shift
+        first = int(live_idx[0]) if live_idx.size else span
+        shift = (first // n_sh) * n_sh
+        if shift:
+            keep = span - shift
+            self._places_np[:keep] = self._places_np[shift:span]
+            self._lengths_np[:keep] = self._lengths_np[shift:span]
+            self._alive_np[:keep] = self._alive_np[shift:span]
+            self._expiry_np[:keep] = self._expiry_np[shift:span]
+            self._alive_np[keep:span] = False
+            self._expiry_np[keep:span] = NEVER_EXPIRES
+            sh = jnp.asarray(shift, jnp.int32)
+            if self._codes_dev is not None:
+                self._codes_dev, self._len_dev = self._roll_single_runner()(
+                    self._codes_dev, self._len_dev, sh
+                )
+            if self._places_dev is not None:
+                self._places_dev = self._roll_sharded_runner()(
+                    self._places_dev,
+                    jnp.asarray(shift // n_sh, jnp.int32),
+                )
+            if self._labels.shape[0] > shift:
+                self._labels = self._labels[shift:] - shift
+            else:
+                self._labels = np.empty((0,), np.int32)
+            self._uf.reset_from_labels(self._labels)
+        if self.delta_join == "device":
+            if self._slab_keys is not None:
+                self._compact_slabs(shift)
+            self._join_stats.compact()
+        # capacity plans may shrink ONLY here: the next update replans
+        # from the post-compaction mirror and compiles fresh programs
+        self._join_plan = None
+        self._score_caps = None
+        self._stream_plan = None
+        self._base = base + shift
+        self.compactions += 1
+        self.compact_ms_total += (time.perf_counter() - t0) * 1e3
+
+    def _compact_slabs(self, shift: int) -> None:
+        """Device slab compaction: stable-partition each shard's slab
+        (tombstones out, survivors rebased by ``shift``), shrinking the
+        per-shard capacity to the post-compaction plan."""
+        n_sh = self.plan.n_shards
+        live = self._join_stats.owner_entries - self._join_stats.owner_dead
+        want = int(max(np.max(live), 1) * self.planner.slack) \
+            if live.size else 1
+        out_cap = max(4, _pow2(want))
+        if self._slab_floor:
+            out_cap = max(out_cap, _pow2(-(-self._slab_floor // n_sh)))
+        for _ in range(self.planner.max_retries + 1):
+            k2 = self._slab_keys.reshape(n_sh, self._slab_cap)
+            r2 = self._slab_rows.reshape(n_sh, self._slab_cap)
+            keys_o, rows_o, _, ovf = self._compact_slab_runner(
+                self._slab_cap, out_cap
+            )(k2, r2, jnp.asarray(shift, jnp.int32))
+            if int(np.asarray(ovf).sum()) == 0:
+                break
+            out_cap *= 2  # mirror drift is a bug, but never commit lossily
+        self._slab_keys = keys_o.reshape(-1)
+        self._slab_rows = rows_o.reshape(-1)
+        self._slab_cap = out_cap
+
+    # -- cached jit helpers for the deletion path ----------------------------
+
+    def _mark_dead_runner(self):
+        import jax
+
+        if not hasattr(self, "_mark_dead_jit"):
+            self._mark_dead_jit = jax.jit(mark_dead_rows)
+        return self._mark_dead_jit
+
+    def _compact_slab_runner(self, in_cap: int, out_cap: int):
+        import jax
+
+        if not hasattr(self, "_compact_cache"):
+            self._compact_cache = {}
+        fn = self._compact_cache.get((in_cap, out_cap))
+        if fn is None:
+
+            @jax.jit
+            def run(k2, r2, shift):
+                return jax.vmap(
+                    lambda kk, rr: compact_slab(kk, rr, shift,
+                                                out_cap=out_cap)
+                )(k2, r2)
+
+            self._compact_cache[(in_cap, out_cap)] = fn = run
+        return fn
+
+    def _roll_single_runner(self):
+        import jax
+
+        if not hasattr(self, "_roll_single_jit"):
+
+            @jax.jit
+            def roll(codes, lens, shift):
+                cap = codes.shape[0]
+                idx = (jnp.arange(cap, dtype=jnp.int32) + shift) % cap
+                return jnp.take(codes, idx, axis=0), jnp.take(lens, idx)
+
+            self._roll_single_jit = roll
+        return self._roll_single_jit
+
+    def _roll_sharded_runner(self):
+        import jax
+
+        n_sh = self.plan.n_shards
+
+        if not hasattr(self, "_roll_sharded_jit"):
+
+            @jax.jit
+            def roll(places, shift_local):
+                cap, L = places.shape
+                cl = cap // n_sh
+                p3 = places.reshape(n_sh, cl, L)
+                idx = (jnp.arange(cl, dtype=jnp.int32) + shift_local) % cl
+                return jnp.take(p3, idx, axis=1).reshape(cap, L)
+
+            self._roll_sharded_jit = roll
+        return self._roll_sharded_jit
+
     # -- ingestion: world growth + device-resident appends -------------------
 
-    def _ingest(self, places: np.ndarray, lengths: np.ndarray) -> None:
+    def _ingest(self, places: np.ndarray, lengths: np.ndarray,
+                *, ttl: int | None = None) -> None:
         d, Lb = places.shape
         a_cap = self.planner.update_capacity(d)
         new_L = max(self.L, Lb)
-        needed = self.n + d  # append slab padding rows are drop-scattered,
-        #                      so they never force a growth on their own
+        span = self.n - self._base  # resident rows (live + tombstoned)
+        needed = span + d  # append slab padding rows are drop-scattered,
+        #                    so they never force a growth on their own
         n_sh = self.plan.n_shards
         new_cap = self.planner.grow_capacity(
             max(self._cap, self._cap_floor), needed
@@ -333,18 +791,32 @@ class StreamingEngine:
         rebuild = (new_L != self.L) or (new_cap != self._cap)
         if rebuild:
             grown = np.full((new_cap, new_L), PAD_PLACE, np.int32)
-            grown[: self.n, : self.L] = self._places_np[: self.n]
+            grown[:span, : self.L] = self._places_np[:span]
             self._places_np = grown
             glen = np.zeros((new_cap,), np.int32)
-            glen[: self.n] = self._lengths_np[: self.n]
+            glen[:span] = self._lengths_np[:span]
             self._lengths_np = glen
+            galive = np.zeros((new_cap,), bool)
+            galive[:span] = self._alive_np[:span]
+            self._alive_np = galive
+            gexp = np.full((new_cap,), NEVER_EXPIRES, np.int64)
+            gexp[:span] = self._expiry_np[:span]
+            self._expiry_np = gexp
             self.L, self._cap = new_L, new_cap
-        # host mirror append (global order); device branches below read
-        # self.n as the NEW world size and n0 as the first new row's id
+        # host mirror append; the mirrors are LOCAL-indexed (slot i holds
+        # global id base + i).  Device branches below read self.n as the
+        # NEW world size and n0 as the first new row's global id
         n0 = self.n
-        self._places_np[n0 : n0 + d, :Lb] = places
-        self._places_np[n0 : n0 + d, Lb:] = PAD_PLACE
-        self._lengths_np[n0 : n0 + d] = lengths
+        n0l = n0 - self._base
+        self._places_np[n0l : n0l + d, :Lb] = places
+        self._places_np[n0l : n0l + d, Lb:] = PAD_PLACE
+        self._lengths_np[n0l : n0l + d] = lengths
+        self._alive_np[n0l : n0l + d] = True
+        eff_ttl = ttl if self.window is None \
+            else (self.window if ttl is None else min(ttl, self.window))
+        self._expiry_np[n0l : n0l + d] = (
+            NEVER_EXPIRES if eff_ttl is None else self.updates + eff_ttl
+        )
         self.n = n0 + d
         self.shard_summaries.insert(n0, lengths)
         # device-resident append: only the new rows transfer.  Each branch
@@ -365,7 +837,7 @@ class StreamingEngine:
                 )
             else:
                 idx = np.full((a_cap,), self._cap, np.int32)  # pads drop
-                idx[:d] = n0 + np.arange(d, dtype=np.int32)
+                idx[:d] = n0l + np.arange(d, dtype=np.int32)
                 self._xfer["bytes_in"] += (
                     pad_places.nbytes + pad_lengths.nbytes + idx.nbytes
                 )
@@ -378,12 +850,15 @@ class StreamingEngine:
             cl = self._cap // n_sh
             if rebuild or self._places_dev is None:
                 phys = np.full((self._cap, self.L), PAD_PLACE, np.int32)
-                g = np.arange(self.n, dtype=np.int64)
-                phys[(g % n_sh) * cl + g // n_sh] = self._places_np[: self.n]
+                span = self.n - self._base
+                g = np.arange(span, dtype=np.int64)
+                # local ids preserve the global round-robin owner: base is
+                # a multiple of n_shards, so g % n_sh == (g + base) % n_sh
+                phys[(g % n_sh) * cl + g // n_sh] = self._places_np[:span]
                 self._places_dev = jnp.asarray(phys)
                 self._xfer["bytes_in"] += phys.nbytes
             else:
-                g = np.arange(n0, n0 + a_cap, dtype=np.int64)
+                g = np.arange(n0l, n0l + a_cap, dtype=np.int64)
                 idx = (g % n_sh) * cl + g // n_sh
                 idx[d:] = self._cap  # out of range -> dropped
                 idx = idx.astype(np.int32)
@@ -453,7 +928,8 @@ class StreamingEngine:
         one-shot pass, so the surviving pair set is identical)."""
         bsum = float(np.asarray(self.betas, np.float32).sum())
         lens = self._lengths_np
-        ub = mss_upper_bound(lens[lo], lens[hi], bsum)
+        b = self._base
+        ub = mss_upper_bound(lens[lo - b], lens[hi - b], bsum)
         keep = ub > np.float32(self.config.rho - PRUNE_EPS)
         return lo[keep], hi[keep], int(lo.shape[0] - keep.sum())
 
@@ -475,11 +951,16 @@ class StreamingEngine:
         impl = self.config.lcs_impl
         p_cap = self.planner.update_capacity(lo.shape[0])
         left, right = self._pad_pairs(lo, hi, p_cap)
+        # the device table is local-indexed: ship LOCAL ids (g - base) so
+        # the gather hits the right slot; the returned arrays stay global
+        left_l, right_l = self._pad_pairs(
+            lo - self._base, hi - self._base, p_cap
+        )
         # pair_rows counts the candidate pairs the driver ships (one per
         # (lo, hi) row); bytes_in counts the padded buffers that transfer
         self._xfer["pair_rows"] += int(lo.shape[0])
-        self._xfer["bytes_in"] += left.nbytes + right.nbytes
-        jl, jr = jnp.asarray(left), jnp.asarray(right)
+        self._xfer["bytes_in"] += left_l.nbytes + right_l.nbytes
+        jl, jr = jnp.asarray(left_l), jnp.asarray(right_l)
         if impl in _KERNEL_MODES:
             from repro.core.types import CandidatePairs
 
@@ -504,6 +985,9 @@ class StreamingEngine:
     def _score_delta_sharded(self, lo, hi):
         n_sh = self.plan.n_shards
         cl = self._cap // n_sh
+        # plan AND ship local ids — the plan's per-destination loads must
+        # be computed under the same hashes the device program applies
+        lo, hi = lo - self._base, hi - self._base
         splan = plan_stream_capacities(
             lo, hi, n_sh, cl, score_mode=self.plan.score_mode,
         )
@@ -536,7 +1020,9 @@ class StreamingEngine:
         mss = np.asarray(out["mss"]).reshape(-1)
         lvl = np.asarray(out["level_lcs"]).reshape(-1, self._H)
         valid = left != PAD_ID
-        left, right = left[valid], right[valid]
+        # device programs speak local ids; results surface as global
+        left = left[valid] + self._base
+        right = right[valid] + self._base
         lvl, mss = lvl[valid], mss[valid]
         # canonical order: results come back in shuffle-resting order
         order = np.lexsort((right, left))
@@ -611,21 +1097,40 @@ class StreamingEngine:
         valid[:, 1:] &= ks[:, 1:] != ks[:, :-1]
         row_idx, col_idx = np.nonzero(valid)
         k_flat = ks[row_idx, col_idx].astype(np.int32)
-        r_flat = (n_old + row_idx).astype(np.int32)
         if k_flat.size == 0:
-            return None, None, 0, 0
+            return None, None, 0, 0, 0
         n_sh = self.plan.n_shards
-        jplan = sticky_join_plan(
-            self.planner.plan_stream_join(k_flat, n_sh, self._join_stats),
-            self._join_plan,
-        )
+        fresh = self.planner.plan_stream_join(k_flat, n_sh,
+                                              self._join_stats)
+        if _fault_inject():
+            # derate every stage of the FRESH plan (sticky maxima still
+            # apply) so the overflow -> compact -> retry path runs
+            fresh = dataclasses.replace(
+                fresh,
+                key_route_cap=_derate_cap(fresh.key_route_cap),
+                nn_cap=_derate_cap(fresh.nn_cap),
+                no_cap=_derate_cap(fresh.no_cap),
+                pair_route_cap=_derate_cap(fresh.pair_route_cap),
+                pair_cap=_derate_cap(fresh.pair_cap),
+            )
+        jplan = sticky_join_plan(fresh, self._join_plan)
+        if self._slab_cap > jplan.slab_cap:
+            # the resident arrays only shrink at a compaction boundary
+            # (_compact rebuilds them); between boundaries the plan must
+            # match their actual allocation
+            jplan = dataclasses.replace(jplan, slab_cap=self._slab_cap)
         if self._slab_floor:
             floor = _pow2(-(-self._slab_floor // n_sh))
             if floor > jplan.slab_cap:
                 jplan = dataclasses.replace(jplan, slab_cap=floor)
         out = None
-        for _ in range(self.planner.max_retries + 1):
+        retries = self.planner.max_retries + (4 if _fault_inject() else 0)
+        compacted = False
+        for _ in range(retries + 1):
             self._ensure_slab(jplan.slab_cap)
+            # local row ids (recomputed per attempt: a mid-loop compaction
+            # moves the base under us)
+            r_flat = (n_old - self._base + row_idx).astype(np.int32)
             chunk = -(-k_flat.shape[0] // n_sh)
             in_k = np.full((n_sh, jplan.key_in_cap), PAD_KEY, np.int32)
             in_r = np.full((n_sh, jplan.key_in_cap), PAD_ID, np.int32)
@@ -644,6 +1149,22 @@ class StreamingEngine:
             ovf = np.asarray(out["overflow"]).sum(axis=0)
             if int(ovf.sum()) == 0:
                 break
+            if int(ovf[2]) and not compacted \
+                    and int(self._join_stats.owner_dead.sum()):
+                # slab overflow with tombstones resident: reclaim the dead
+                # slots FIRST and retry at the (possibly smaller) post-
+                # compaction plan — growth is the last resort, not the
+                # first response to a slab that is mostly tombstones
+                self._compact()
+                compacted = True
+                jplan = self.planner.plan_stream_join(
+                    k_flat, n_sh, self._join_stats
+                )
+                if self._slab_cap > jplan.slab_cap:
+                    jplan = dataclasses.replace(
+                        jplan, slab_cap=self._slab_cap
+                    )
+                continue
             # exact planning makes steady-state overflow impossible; this
             # belt-and-braces path doubles whatever stage busted
             jplan = dataclasses.replace(
@@ -654,14 +1175,18 @@ class StreamingEngine:
                 pair_cap=jplan.pair_cap * 2,
                 slab_cap=jplan.slab_cap * (2 if int(ovf[2]) else 1),
             )
+            self._admission_check_bytes(
+                self._resident_bytes_at(self._cap, jplan.slab_cap),
+                "in-mesh delta join retry doubling",
+            )
         if int(np.asarray(out["overflow"]).sum()):
             # never adopt a slab whose merge dropped entries: committing it
             # would silently lose every future pair involving the dropped
             # rows.  Exact planning makes this unreachable; reaching it
             # means the planning invariant broke, so fail loudly.
-            raise RuntimeError(
+            raise CapacityExceeded(
                 "in-mesh delta join still overflowed after "
-                f"{self.planner.max_retries} retries (per-shard overflow "
+                f"{retries} retries (per-shard overflow "
                 f"{np.asarray(out['overflow']).tolist()}); refusing to "
                 "commit a lossy bucket state"
             )
@@ -804,9 +1329,12 @@ class StreamingEngine:
         self.similar_pairs.update(
             (int(a), int(b)) for a, b in new_edges
         )
-        self._uf.add(self.n - self._uf.num_nodes)
+        # the union-find / label state lives in LOCAL index space (node i
+        # = global id base + i) so compaction can slide it with the world
+        base = self._base
+        self._uf.add(self.n - base - self._uf.num_nodes)
         for a, b in new_edges:
-            self._uf.union(int(a), int(b))
+            self._uf.union(int(a) - base, int(b) - base)
         mode = self.config.community_mode
         if mode == "cliques":
             return comm.maximal_cliques(self.similar_pairs)
@@ -817,8 +1345,17 @@ class StreamingEngine:
             )
         if self.components_impl == "unionfind":
             self._labels = self._uf.labels()
-            return comm.components_as_sets(self._labels)
+            return self._sets_to_global(
+                comm.components_as_sets(self._labels)
+            )
         return self._jit_components(new_edges)
+
+    def _sets_to_global(self, sets: set) -> set:
+        """Translate local-index community sets to global trajectory ids."""
+        base = self._base
+        if not base:
+            return sets
+        return {frozenset(i + base for i in s) for s in sets}
 
     def _jit_components(self, new_edges) -> set:
         """Resumable min-label propagation: the previous fixpoint becomes
@@ -828,8 +1365,9 @@ class StreamingEngine:
         are padded to the world capacity / a power-of-two edge cap so
         steady-state updates reuse the compiled program.
         """
-        if not self.n:
+        if self.n <= self._base:
             return set()
+        base = self._base
         cap = self._cap
         seed = np.arange(cap, dtype=np.int32)
         seed[: self._labels.shape[0]] = self._labels
@@ -837,12 +1375,12 @@ class StreamingEngine:
         el = np.full((e_cap,), PAD_ID, np.int32)
         er = np.full((e_cap,), PAD_ID, np.int32)
         for i, (a, b) in enumerate(new_edges):
-            el[i], er[i] = a, b
+            el[i], er[i] = a - base, b - base
         left = np.concatenate([seed, el])
         right = np.concatenate([np.arange(cap, dtype=np.int32), er])
         labels = comm.connected_components(
             jnp.asarray(left), jnp.asarray(right), num_nodes=cap,
             init_labels=jnp.asarray(seed),
         )
-        self._labels = np.asarray(labels)[: self.n]
-        return comm.components_as_sets(self._labels)
+        self._labels = np.asarray(labels)[: self.n - base]
+        return self._sets_to_global(comm.components_as_sets(self._labels))

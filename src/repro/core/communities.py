@@ -162,6 +162,75 @@ class UnionFind:
         :func:`components_as_sets`."""
         return components_as_sets(self.labels(), min_size=min_size)
 
+    def reset_from_labels(self, labels: np.ndarray) -> None:
+        """Reinitialize to the partition encoded by min-member ``labels``.
+
+        ``labels[v]`` must be the min member of ``v``'s component (the
+        :meth:`labels` / :func:`connected_components` canonical form) —
+        then ``parent[v] = labels[v]`` is a valid depth-1 forest (the min
+        member roots itself) and subsequent unions continue incrementally.
+        This is how deletion re-enters the incremental path: components
+        are re-solved once (``components_after_deletion``) and the
+        union-find warm-restarts from the surviving partition instead of
+        replaying the entire edge history.
+        """
+        labels = np.asarray(labels, np.int64).reshape(-1)
+        n = labels.shape[0]
+        cap = max(16, int(2 ** np.ceil(np.log2(max(n, 1)))))
+        self._parent = np.arange(cap, dtype=np.int64)
+        self._parent[:n] = labels
+        self._size = np.ones(cap, dtype=np.int64)
+        if n:
+            counts = np.bincount(labels, minlength=n)
+            roots = np.nonzero(counts)[0]
+            self._size[roots] = counts[roots]
+        self.num_nodes = n
+
+
+def components_after_deletion(
+    labels: np.ndarray,
+    dead: Sequence[int],
+    surviving_edges: Iterable[tuple[int, int]],
+) -> np.ndarray:
+    """Community *un*-merging: re-label after deleting the ``dead`` nodes.
+
+    Connected components are incrementally maintainable under edge
+    ADDITION (labels only merge downward), but deletion can SPLIT a
+    component — e.g. expiring the bridge node of a path — which no local
+    label update can discover.  The warm re-solve: only components that
+    CONTAIN a dead node ("touched") are recomputed, from the surviving
+    edges restricted to them; untouched components keep their labels
+    verbatim (their min member is alive, so the canonical form is stable).
+    Cost O(n + E_touched) instead of replaying the world's edge history.
+
+    labels:          int [n] current min-member labels (nodes 0..n-1).
+    dead:            node ids being deleted (become self-labeled
+                     singletons; the caller must already have dropped
+                     every edge referencing them).
+    surviving_edges: the post-deletion edge set (edges inside untouched
+                     components are skipped internally).
+
+    Returns the new int32 [n] min-member labels — bit-identical to a cold
+    :func:`connected_components` / union-find fixpoint over
+    ``surviving_edges``.
+    """
+    labels = np.asarray(labels, np.int64).copy()
+    n = labels.shape[0]
+    dead = np.asarray(sorted(set(int(x) for x in dead)), np.int64)
+    if dead.size == 0:
+        return labels.astype(np.int32)
+    touched = np.unique(labels[dead])
+    touched_mask = np.isin(labels, touched)
+    idx = np.nonzero(touched_mask)[0]
+    labels[idx] = idx  # touched components dissolve to singletons...
+    uf = UnionFind()
+    uf.reset_from_labels(labels)
+    touched_nodes = set(idx.tolist())
+    for a, b in surviving_edges:  # ...and re-form from surviving edges
+        if int(a) in touched_nodes or int(b) in touched_nodes:
+            uf.union(int(a), int(b))
+    return uf.labels()
+
 
 # ---------------------------------------------------------------------------
 # exact oracle: maximal cliques (Bron-Kerbosch with pivoting)

@@ -115,7 +115,10 @@ def probe_pairs(
     excl_no = jnp.cumsum(counts) - counts
     q, f, u, no_total = _enumerate_slots(excl_no, counts, no_cap)
     sidx = jnp.clip(lo_idx[f] + u, 0, slab_keys.shape[0] - 1)
-    ok2 = q < no_total
+    # tombstones: a retired entry keeps its key (so the searchsorted run
+    # and the examined count stay exact) but its row is PAD_ID — it is
+    # examined like any resident slot, just never emitted as a pair
+    ok2 = (q < no_total) & (slab_rows[sidx] != PAD_ID)
     no_a = jnp.where(ok2, slab_rows[sidx], PAD_ID)
     no_b = jnp.where(ok2, rows_s[f], PAD_ID)
     a = jnp.concatenate([nn_a, no_a])
@@ -208,12 +211,78 @@ def probe_rows(
     excl = jnp.cumsum(counts) - counts
     q, f, u, total = _enumerate_slots(excl, counts, cap)
     sidx = jnp.clip(lo_idx[f] + u, 0, slab_keys.shape[0] - 1)
-    ok = q < total
+    # tombstoned slots (row == PAD_ID) are examined but never emitted,
+    # matching probe_pairs' deletion semantics
+    ok = (q < total) & (slab_rows[sidx] != PAD_ID)
     rows = jnp.where(ok, slab_rows[sidx], PAD_ID)
     out_payload = jnp.where(ok, pay_s[f], PAD_ID)
     examined = total.astype(jnp.int32)
     overflow = jnp.maximum(total - cap, 0).astype(jnp.int32)
     return rows, out_payload, examined, overflow
+
+
+def mark_dead_rows(slab_rows: jnp.ndarray, dead_sorted: jnp.ndarray):
+    """Tombstone every slab slot whose row id is in ``dead_sorted``.
+
+    dead_sorted: int32 [R] ascending retired row ids, PAD_ID-padded at the
+    end (PAD_ID never matches a live row, and a PAD_ID slab slot matching
+    the padding is already dead — the write is idempotent).  Keys are NOT
+    touched: the tombstone keeps its key so the sorted-slab searchsorted
+    invariant and the exact examined accounting survive; only the row
+    becomes PAD_ID, which :func:`probe_pairs`/:func:`probe_rows` mask out
+    of emission.  O(cap log R), no collectives — the slab never leaves
+    the device.
+    """
+    idx = jnp.searchsorted(dead_sorted, slab_rows).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, dead_sorted.shape[0] - 1)
+    hit = dead_sorted[idx] == slab_rows
+    return jnp.where(hit, PAD_ID, slab_rows)
+
+
+def compact_slab(
+    slab_keys: jnp.ndarray,
+    slab_rows: jnp.ndarray,
+    shift: jnp.ndarray,
+    *,
+    out_cap: int,
+):
+    """Drop-mode compaction of one shard's slab: reclaim tombstones.
+
+    A stable partition — live slots (row != PAD_ID) keep their (key, id)
+    sort order and move to the front, tombstones and padding become
+    (PAD_KEY, PAD_ID) at the end — implemented as one ``lax.sort`` on
+    (dead flag, original position) carrying keys and rows.  Surviving row
+    ids are rebased by ``shift`` (a scalar int32 operand: the world-base
+    delta of a prefix-rebase compaction; 0 keeps ids unchanged), so the
+    kernel never recompiles when the base moves.
+
+    out_cap: static output capacity — compaction is the one boundary
+    where the slab may SHRINK (the planning mirror's post-compaction
+    entry counts justify it); live entries beyond ``out_cap`` are counted
+    in ``overflow`` and the caller must re-run with a bigger out_cap
+    (never committed lossily, same contract as :func:`merge_insert`).
+
+    Returns ``(keys' [out_cap], rows' [out_cap], live, overflow)``.
+    """
+    cap = slab_keys.shape[0]
+    dead = (slab_rows == PAD_ID).astype(jnp.int32)
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    _, _, keys_c, rows_c = jax.lax.sort(
+        (dead, pos, slab_keys, slab_rows), num_keys=2
+    )
+    live = (cap - jnp.sum(dead)).astype(jnp.int32)
+    keep = pos < live
+    keys_c = jnp.where(keep, keys_c, PAD_KEY)
+    rows_c = jnp.where(keep, rows_c - shift.astype(jnp.int32), PAD_ID)
+    if out_cap >= cap:
+        pad = ((0, out_cap - cap),)
+        keys_o = jnp.pad(keys_c, pad, constant_values=PAD_KEY)
+        rows_o = jnp.pad(rows_c, pad, constant_values=PAD_ID)
+    else:
+        keys_o = keys_c[:out_cap]
+        rows_o = rows_c[:out_cap]
+    overflow = jnp.maximum(live - out_cap, 0).astype(jnp.int32)
+    return keys_o, rows_o, live, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +291,8 @@ def probe_rows(
 def probe_pairs_ref(slab_keys, slab_rows, keys, rows):
     """Bucket-semantics oracle for :func:`probe_pairs`: the pre-dedup
     (lo, hi) multiset and the exact examined count, computed from plain
-    per-key dict buckets."""
+    per-key dict buckets.  Tombstoned slab slots (row == PAD_ID under a
+    live key) are examined like any resident member but never emitted."""
     slab_keys = np.asarray(slab_keys)
     slab_rows = np.asarray(slab_rows)
     buckets: dict[int, list[int]] = {}
@@ -239,7 +309,8 @@ def probe_pairs_ref(slab_keys, slab_rows, keys, rows):
             continue
         for m in buckets.get(k, []) + seen.get(k, []):
             examined += 1
-            pairs.append((min(m, rid), max(m, rid)))
+            if m != PAD_ID:
+                pairs.append((min(m, rid), max(m, rid)))
         seen.setdefault(k, []).append(rid)
     return pairs, examined
 
@@ -260,7 +331,8 @@ def probe_rows_ref(slab_keys, slab_rows, keys, payload):
             continue
         for m in buckets.get(k, []):
             examined += 1
-            matches.append((m, p))
+            if m != PAD_ID:
+                matches.append((m, p))
     return matches, examined
 
 
@@ -286,6 +358,21 @@ def merge_insert_ref(slab_keys, slab_rows, keys, rows, cap):
     return out_k, out_r, overflow
 
 
+def compact_slab_ref(slab_keys, slab_rows, shift, out_cap):
+    """Stable-partition oracle for :func:`compact_slab`."""
+    live = [
+        (int(k), int(r) - int(shift))
+        for k, r in zip(np.asarray(slab_keys), np.asarray(slab_rows))
+        if r != PAD_ID
+    ]
+    overflow = max(len(live) - out_cap, 0)
+    out_k = np.full((out_cap,), PAD_KEY, np.int32)
+    out_r = np.full((out_cap,), PAD_ID, np.int32)
+    for i, (k, r) in enumerate(live[:out_cap]):
+        out_k[i], out_r[i] = k, r
+    return out_k, out_r, len(live), overflow
+
+
 # ---------------------------------------------------------------------------
 # host-side planning statistics (counts only — never ids)
 # ---------------------------------------------------------------------------
@@ -300,12 +387,21 @@ class StreamJoinStats:
     new-vs-old / new-vs-new emission counts and slab-entry deltas of one
     update; ``commit`` folds the update in once the device run is
     accepted, so overflow retries replan from unchanged statistics.
+
+    Deletion keeps the mirror honest about DEFERRED reclamation: retired
+    rows' occurrences stay in ``counts`` (their tombstones still occupy
+    slab slots and are still examined by every probe) and are additionally
+    tracked in ``dead_counts``/``owner_dead`` until :meth:`compact`
+    subtracts them — so capacity plans between compactions cover the
+    tombstones, and shrink exactly at the compaction boundary.
     """
 
     def __init__(self, n_shards: int):
         self.n_shards = n_shards
         self.counts: dict[int, int] = {}
         self.owner_entries = np.zeros((n_shards,), np.int64)
+        self.dead_counts: dict[int, int] = {}
+        self.owner_dead = np.zeros((n_shards,), np.int64)
 
     def plan_update(self, keys_flat: np.ndarray, owners_flat: np.ndarray):
         """Exact per-owner loads of inserting ``keys_flat`` (per-row-deduped
@@ -342,6 +438,44 @@ class StreamJoinStats:
             self.counts[k] = self.counts.get(k, 0) + int(m)
         np.add.at(self.owner_entries, owners_flat, 1)
 
+    def retire(self, keys_flat: np.ndarray, owners_flat: np.ndarray) -> None:
+        """Fold one retirement's tombstoned key occurrences into the dead
+        ledger.  ``counts``/``owner_entries`` are NOT reduced — the
+        tombstones still occupy (and are examined in) their slab slots —
+        only :meth:`compact` reclaims them."""
+        if keys_flat.size == 0:
+            return
+        uniq, first = np.unique(keys_flat, return_index=True)
+        counts = np.bincount(
+            np.searchsorted(uniq, keys_flat), minlength=uniq.shape[0]
+        )
+        for k, m in zip(uniq.tolist(), counts.tolist()):
+            self.dead_counts[k] = self.dead_counts.get(k, 0) + int(m)
+        np.add.at(self.owner_dead, owners_flat, 1)
+
+    def compact(self) -> None:
+        """Reclaim the dead ledger: subtract tombstoned occurrences from
+        the planning counts (dropping emptied keys) and the per-owner
+        occupancy — the host mirror of one device slab compaction."""
+        for k, m in self.dead_counts.items():
+            left = self.counts.get(k, 0) - m
+            if left > 0:
+                self.counts[k] = left
+            else:
+                self.counts.pop(k, None)
+        self.dead_counts = {}
+        self.owner_entries = np.maximum(
+            self.owner_entries - self.owner_dead, 0
+        )
+        self.owner_dead = np.zeros((self.n_shards,), np.int64)
+
+    def dead_fraction(self) -> float:
+        """Max per-owner tombstone fraction of the resident slab entries
+        (the compaction watermark input)."""
+        occ = np.maximum(self.owner_entries, 1)
+        return float(np.max(self.owner_dead / occ)) \
+            if self.owner_entries.sum() else 0.0
+
     @property
     def num_keys(self) -> int:
         return len(self.counts)
@@ -375,3 +509,24 @@ class ShardSummaries:
             % self.n_shards
         np.add.at(self.rows, shard, 1)
         np.maximum.at(self.max_len, shard, lengths)
+
+    def rebuild(self, first_id: int, lengths: np.ndarray,
+                alive: np.ndarray) -> None:
+        """Recompute the summaries from the LIVE rows only.
+
+        Maxima cannot be maintained under deletion (removing the longest
+        row must LOWER the shard's bound, or ``serve_prune`` keeps
+        scanning shards for matches that no longer exist), so eviction
+        recomputes from the host length mirror: rows ``first_id ..
+        first_id + len - 1`` with ``alive[i]`` true.  O(live) per
+        retirement — summaries stay sound and tight."""
+        lengths = np.asarray(lengths, np.int64).reshape(-1)
+        alive = np.asarray(alive, bool).reshape(-1)
+        self.rows = np.zeros((self.n_shards,), np.int64)
+        self.max_len = np.zeros((self.n_shards,), np.int64)
+        if lengths.size == 0:
+            return
+        shard = (first_id + np.arange(lengths.shape[0], dtype=np.int64)) \
+            % self.n_shards
+        np.add.at(self.rows, shard[alive], 1)
+        np.maximum.at(self.max_len, shard[alive], lengths[alive])

@@ -145,6 +145,46 @@ class BucketIndex:
             examined,
         )
 
+    def retire(self, ids, keys_np: np.ndarray) -> None:
+        """Evict rows from their buckets — exact removal, host-side.
+
+        ids:     int [d] global row ids being retired (any order; ids
+                 absent from their buckets are ignored, so the call is
+                 idempotent and safe after a prior eviction).
+        keys_np: int32 [d, S] PAD_KEY-padded join keys of those rows,
+                 recomputed by the caller from its host mirror (keys are a
+                 pure per-row function, so they are always recoverable).
+
+        Unlike the device slab — which defers reclamation behind
+        tombstones until a watermark compaction — the host oracle evicts
+        EAGERLY: each bucket list shrinks the moment a member retires, so
+        a pathological hot bucket under TTL/eviction is bounded by its
+        LIVE membership (the satellite fix for the unbounded driver lists
+        past ``hot_bucket_warn``), and every subsequent ``insert`` probes
+        exactly the live world.  O(bucket length) per (key, id).
+        """
+        keys_np = np.asarray(keys_np)
+        removed = 0
+        for r, rid in enumerate(np.asarray(ids).tolist()):
+            row = np.unique(keys_np[r][keys_np[r] != PAD_KEY])
+            for key in row.tolist():
+                members = self._buckets.get(key)
+                if members is None:
+                    continue
+                try:
+                    members.remove(rid)
+                    removed += 1
+                except ValueError:
+                    continue
+                if not members:
+                    del self._buckets[key]
+                    self._warned_keys.discard(key)
+        self.num_keys_inserted -= removed
+
+    def max_bucket_len(self) -> int:
+        """Largest live bucket (the hot-bucket boundedness probe)."""
+        return max((len(m) for m in self._buckets.values()), default=0)
+
     def probe(
         self, keys_np: np.ndarray
     ) -> tuple[np.ndarray, np.ndarray, int]:

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core.communities import (
-    UnionFind, components_as_sets, connected_components, maximal_cliques,
-    pairs_to_set, qa1, qa2,
+    UnionFind, components_after_deletion, components_as_sets,
+    connected_components, maximal_cliques, pairs_to_set, qa1, qa2,
 )
 from repro.core.types import PAD_ID
 
@@ -196,3 +196,132 @@ def test_pairs_to_set_ignores_padding():
     left = jnp.asarray([2, PAD_ID, 5], jnp.int32)
     right = jnp.asarray([1, PAD_ID, 7], jnp.int32)
     assert pairs_to_set(left, right) == {(1, 2), (5, 7)}
+
+
+# ---------------------------------------------------------------------------
+# edge expiry / deletion (ISSUE 8): communities must UN-merge
+# ---------------------------------------------------------------------------
+def test_bridge_deletion_splits_component():
+    """Deleting the bridge node of a path splits the component — the case
+    no incremental label update can discover (labels only merge downward
+    under edge addition)."""
+    l, r = _edges_to_arrays([(0, 1), (1, 2), (2, 3), (3, 4)])
+    labels = np.asarray(connected_components(l, r, num_nodes=5))
+    assert components_as_sets(labels) == {frozenset(range(5))}
+    got = components_after_deletion(labels, [2], [(0, 1), (3, 4)])
+    assert components_as_sets(got) == {frozenset({0, 1}), frozenset({3, 4})}
+    np.testing.assert_array_equal(got, [0, 0, 2, 3, 3])
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_components_after_deletion_matches_cold_fixpoint(seed):
+    """Property test: the warm re-solve (only touched components recompute)
+    must be bit-identical to a cold fixpoint over the surviving edges, and
+    ``reset_from_labels`` must re-enter the incremental path losslessly."""
+    rng = np.random.default_rng(300 + seed)
+    n = int(rng.integers(4, 32))
+    m = int(rng.integers(0, 60))
+    edges = [(int(a), int(b)) for a, b in rng.integers(0, n, size=(m, 2))
+             if a != b]
+    dead = sorted({int(x) for x in
+                   rng.integers(0, n, size=int(rng.integers(1, n // 2 + 1)))})
+    surviving = [e for e in edges if e[0] not in dead and e[1] not in dead]
+    l, r = _edges_to_arrays(edges, cap=max(len(edges), 1))
+    labels = np.asarray(connected_components(l, r, num_nodes=n))
+    got = components_after_deletion(labels, dead, surviving)
+    ls, rs = _edges_to_arrays(surviving, cap=max(len(surviving), 1))
+    cold = np.asarray(connected_components(ls, rs, num_nodes=n))
+    np.testing.assert_array_equal(got, cold)
+    # warm-start under deletion: the union-find restored from the warm
+    # labels stays in lockstep with a cold union-find on future unions
+    uf_warm = UnionFind()
+    uf_warm.reset_from_labels(got)
+    uf_cold = UnionFind(n)
+    for a, b in surviving:
+        uf_cold.union(a, b)
+    np.testing.assert_array_equal(uf_warm.labels(), uf_cold.labels())
+    extra = [(int(a), int(b)) for a, b in rng.integers(0, n, size=(8, 2))
+             if a != b]
+    for a, b in extra:
+        uf_warm.union(a, b)
+        uf_cold.union(a, b)
+    np.testing.assert_array_equal(uf_warm.labels(), uf_cold.labels())
+
+
+def _bridge_world():
+    """Five trajectories over an 8-place alphabet: two 'A' rows, a bridge
+    'B', two 'C' rows.  A and C share NO places; B overlaps both — so at a
+    rho between the cross-group MSS and the bridge MSS, the similarity
+    graph is exactly A1-A2, A*-B, B-C*, C1-C2: one component held together
+    by B alone."""
+    from repro.data import synthetic_setup
+
+    A = [1, 2, 3, 4]
+    B = [3, 4, 5, 6]
+    C = [5, 6, 7, 8]
+    places = np.asarray([A, A, B, C, C], np.int32)
+    lengths = np.full((5,), 4, np.int32)
+    _, forest = synthetic_setup(
+        5, num_types=3, classes_per_type=3, num_places=12,
+        min_len=4, max_len=4, seed=2,
+    )
+    return places, lengths, forest
+
+
+def _pick_bridge_rho(places, lengths, forest):
+    """Compute every pair's MSS at rho ~ 0 and place rho strictly between
+    the worst cross-group pair and the weakest edge we must keep."""
+    from repro.api import AnotherMeEngine, EngineConfig
+    from tests.test_streaming import make_batch, score_map
+
+    # shingle order 2: the A/B and B/C overlaps are 2-place runs
+    probe = AnotherMeEngine(
+        forest, EngineConfig(rho=1e-6, k=2, community_mode="components")
+    ).run(make_batch(places, lengths))
+    mss = {pair: v[0] for pair, v in score_map(probe).items()}
+    keep = [(0, 1), (0, 2), (1, 2), (2, 3), (2, 4), (3, 4)]
+    cross = [(0, 3), (0, 4), (1, 3), (1, 4)]
+    lo = max((mss.get(p, 0.0) for p in cross), default=0.0)
+    hi = min(mss[p] for p in keep)
+    assert lo < hi, f"bridge premise violated: cross {lo} >= keep {hi}"
+    return (lo + hi) / 2.0
+
+
+@pytest.mark.parametrize("components_impl", ("unionfind", "jit"))
+def test_engine_bridge_expiry_splits_then_reforms(components_impl):
+    """Engine-level bridge property: retiring the bridge trajectory splits
+    the community; re-ingesting an identical trajectory re-forms it, and
+    the rebuilt world matches a fresh engine over the live rows."""
+    from repro.api import EngineConfig, StreamingEngine
+    from tests.test_streaming import make_batch, score_map
+
+    places, lengths, forest = _bridge_world()
+    rho = _pick_bridge_rho(places, lengths, forest)
+    cfg = EngineConfig(rho=rho, k=2, community_mode="components")
+    stream = StreamingEngine(forest, cfg, components_impl=components_impl)
+    res = stream.update(make_batch(places, lengths))
+    assert res.similar_pairs == {(0, 1), (0, 2), (1, 2), (2, 3), (2, 4),
+                                 (3, 4)}
+    assert res.communities == {frozenset(range(5))}
+    # expire the bridge: one community must SPLIT into two
+    assert stream.retire([2]) == 1
+    res = stream.update(make_batch(np.zeros((0, 1), np.int32),
+                                   np.zeros((0,), np.int32)))
+    assert res.communities == {frozenset({0, 1}), frozenset({3, 4})}
+    assert res.similar_pairs == {(0, 1), (3, 4)}
+    # re-ingest an identical bridge (fresh id 5): the community re-forms
+    res = stream.update(make_batch(places[2:3], lengths[2:3]))
+    assert res.communities == {frozenset({0, 1, 3, 4, 5})}
+    # expire-then-reinsert == fresh: identical to an engine that only ever
+    # saw the surviving rows (ids translated 3->2, 4->3, 5->4)
+    fresh_places = np.concatenate([places[:2], places[3:], places[2:3]])
+    fresh_lengths = np.concatenate([lengths[:2], lengths[3:], lengths[2:3]])
+    fresh = StreamingEngine(
+        forest, cfg, components_impl=components_impl
+    ).update(make_batch(fresh_places, fresh_lengths))
+    trans = {0: 0, 1: 1, 3: 2, 4: 3, 5: 4}
+    got_pairs = {(trans[a], trans[b]): v
+                 for (a, b), v in score_map(res).items()}
+    assert got_pairs == score_map(fresh)
+    assert {frozenset(trans[v] for v in c) for c in res.communities} \
+        == fresh.communities

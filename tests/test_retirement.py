@@ -1,0 +1,472 @@
+"""Bounded-memory retirement suite (ISSUE 8 tentpole + satellites).
+
+Pins every layer of the deletion machinery in isolation, below the
+end-to-end differential harness (tests/test_stream_join_differential.py):
+
+  * tombstone kernels — ``mark_dead_rows``, drop-mode ``compact_slab``
+    (jitted + vmapped, with row-id rebasing), and the tombstone-masked
+    ``probe_pairs`` / ``probe_rows`` — against their numpy references,
+    including the contract that tombstoned slots are EXAMINED (the exact
+    work accounting survives deletion) but never EMITTED;
+  * TTL / sliding-window timing: a row ingested at update U with ttl T is
+    gone at the start of update U + T, and ``window=N`` ceilings any ttl;
+  * ``retire`` validation + idempotency;
+  * admission control: ``CapacityExceeded`` refuses an over-budget update
+    BEFORE any mutation — the world is bit-identical afterwards, and the
+    same batch succeeds once the budget is lifted (satellite 1);
+  * the host ``BucketIndex`` hot-bucket lists stay bounded by LIVE
+    membership under a sliding window, with results still exact
+    (satellite 2 — the regression for the unbounded-driver-list wall);
+  * the planning mirrors: ``StreamJoinStats`` retire/compact ledger,
+    ``ShardSummaries.rebuild``, ``UnionFind.reset_from_labels``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    AnotherMeEngine, CapacityExceeded, EngineConfig, ExecutionPlan,
+    StreamingEngine,
+)
+from repro.core.communities import UnionFind
+from repro.core.device_index import (
+    StreamJoinStats, ShardSummaries, compact_slab, compact_slab_ref,
+    mark_dead_rows, probe_pairs, probe_pairs_ref, probe_rows, probe_rows_ref,
+)
+from repro.core.types import PAD_ID, PAD_KEY, TrajectoryBatch
+from repro.data import synthetic_setup
+
+from tests.test_streaming import make_batch, score_map, random_world
+
+
+def empty_batch():
+    return make_batch(np.zeros((0, 1), np.int32), np.zeros((0,), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# kernel golden tests
+# ---------------------------------------------------------------------------
+def make_slab(entries, cap):
+    """Sorted slab from (key, row) pairs; tombstones keep their key with
+    row == PAD_ID, exactly the post-``mark_dead_rows`` state."""
+    entries = sorted(entries, key=lambda kr: kr[0])
+    kk = np.full((cap,), PAD_KEY, np.int32)
+    rr = np.full((cap,), PAD_ID, np.int32)
+    for i, (k, r) in enumerate(entries):
+        kk[i], rr[i] = k, r
+    return kk, rr
+
+
+def pad_flat(vals, cap, pad):
+    out = np.full((cap,), pad, np.int32)
+    out[: len(vals)] = vals
+    return out
+
+
+def test_mark_dead_rows_matches_reference():
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        cap = int(rng.integers(4, 64))
+        n_live = int(rng.integers(0, cap))
+        kk, rr = make_slab(
+            [(int(rng.integers(0, 9)), 100 + i) for i in range(n_live)], cap
+        )
+        dead = rng.choice(np.arange(100, 100 + max(n_live, 1)),
+                          size=int(rng.integers(0, n_live + 1)),
+                          replace=False)
+        dead_cap = 1 << max(int(np.ceil(np.log2(max(dead.size, 1)))), 2)
+        dead_sorted = pad_flat(np.sort(dead).tolist(), dead_cap, PAD_ID)
+        got = np.asarray(mark_dead_rows(jnp.asarray(rr),
+                                        jnp.asarray(dead_sorted)))
+        dead_set = set(dead.tolist())
+        want = np.array(
+            [PAD_ID if r in dead_set else r for r in rr.tolist()], np.int32
+        )
+        np.testing.assert_array_equal(got, want)
+        # idempotent: marking again changes nothing
+        np.testing.assert_array_equal(
+            np.asarray(mark_dead_rows(jnp.asarray(got),
+                                      jnp.asarray(dead_sorted))), want
+        )
+
+
+@pytest.mark.parametrize("out_cap_mode", ("same", "shrink", "grow", "tight"))
+def test_compact_slab_matches_reference(out_cap_mode):
+    rng = np.random.default_rng(11)
+    compact_j = jax.jit(compact_slab, static_argnames=("out_cap",))
+    for trial in range(12):
+        cap = int(rng.integers(8, 64))
+        n_ent = int(rng.integers(0, cap))
+        entries = []
+        for i in range(n_ent):
+            row = 100 + i if rng.random() > 0.4 else PAD_ID  # tombstone
+            entries.append((int(rng.integers(0, 9)), row))
+        kk, rr = make_slab(entries, cap)
+        live = int(np.sum(rr != PAD_ID))
+        shift = int(rng.integers(0, 50))
+        out_cap = {
+            "same": cap, "shrink": max(cap // 2, 1), "grow": cap + 8,
+            "tight": max(live, 1),
+        }[out_cap_mode]
+        ko, ro, lv, ov = compact_j(
+            jnp.asarray(kk), jnp.asarray(rr),
+            jnp.asarray(shift, jnp.int32), out_cap=out_cap,
+        )
+        wk, wr, wlive, wov = compact_slab_ref(kk, rr, shift, out_cap)
+        np.testing.assert_array_equal(np.asarray(ko), wk)
+        np.testing.assert_array_equal(np.asarray(ro), wr)
+        assert int(lv) == wlive == live
+        assert int(ov) == wov == max(live - out_cap, 0)
+
+
+def test_compact_slab_vmapped_over_shards():
+    """The engine's actual call shape: vmap over the shard axis with one
+    broadcast shift operand."""
+    rng = np.random.default_rng(13)
+    cap, n_sh = 16, 4
+    kks, rrs = [], []
+    for _ in range(n_sh):
+        ent = [(int(rng.integers(0, 6)),
+                200 + i if rng.random() > 0.5 else PAD_ID)
+               for i in range(int(rng.integers(0, cap)))]
+        kk, rr = make_slab(ent, cap)
+        kks.append(kk)
+        rrs.append(rr)
+    fn = jax.jit(
+        jax.vmap(
+            lambda k, r, s: compact_slab(k, r, s, out_cap=cap),
+            in_axes=(0, 0, None),
+        )
+    )
+    ko, ro, lv, ov = fn(jnp.asarray(np.stack(kks)), jnp.asarray(np.stack(rrs)),
+                        jnp.asarray(100, jnp.int32))
+    for s in range(n_sh):
+        wk, wr, wlive, wov = compact_slab_ref(kks[s], rrs[s], 100, cap)
+        np.testing.assert_array_equal(np.asarray(ko[s]), wk)
+        np.testing.assert_array_equal(np.asarray(ro[s]), wr)
+        assert int(lv[s]) == wlive and int(ov[s]) == wov == 0
+
+
+def test_probe_pairs_tombstones_examined_not_emitted():
+    """The deletion contract pinned exactly: a key run holding 2 live rows
+    and 1 tombstone costs 3 examined slots per probe but emits 2 pairs."""
+    kk, rr = make_slab([(5, 10), (5, PAD_ID), (5, 12)], cap=8)
+    keys = pad_flat([5], 4, PAD_KEY)
+    rows = pad_flat([20], 4, PAD_ID)
+    lo, hi, examined, overflow = probe_pairs(
+        jnp.asarray(kk), jnp.asarray(rr), jnp.asarray(keys),
+        jnp.asarray(rows), nn_cap=4, no_cap=8,
+    )
+    got = sorted(
+        (int(a), int(b)) for a, b in
+        zip(np.asarray(lo), np.asarray(hi)) if a != PAD_ID
+    )
+    assert got == [(10, 20), (12, 20)]
+    assert int(examined) == 3  # the tombstone slot is still examined
+    assert int(overflow) == 0
+
+
+def test_probe_pairs_matches_reference_under_tombstones():
+    rng = np.random.default_rng(17)
+    for trial in range(10):
+        cap = 64
+        ent = [(int(rng.integers(0, 7)),
+                100 + i if rng.random() > 0.3 else PAD_ID)
+               for i in range(int(rng.integers(0, 40)))]
+        kk, rr = make_slab(ent, cap)
+        nq = int(rng.integers(0, 12))
+        keys = pad_flat([int(rng.integers(0, 7)) for _ in range(nq)],
+                        16, PAD_KEY)
+        rows = pad_flat([500 + i for i in range(nq)], 16, PAD_ID)
+        lo, hi, examined, overflow = probe_pairs(
+            jnp.asarray(kk), jnp.asarray(rr), jnp.asarray(keys),
+            jnp.asarray(rows), nn_cap=256, no_cap=256,
+        )
+        want_pairs, want_examined = probe_pairs_ref(kk, rr, keys, rows)
+        got = sorted(
+            (int(a), int(b)) for a, b in
+            zip(np.asarray(lo), np.asarray(hi)) if a != PAD_ID
+        )
+        assert got == sorted(want_pairs)
+        assert int(examined) == want_examined
+        assert int(overflow) == 0
+
+
+def test_probe_rows_matches_reference_under_tombstones():
+    rng = np.random.default_rng(19)
+    for trial in range(10):
+        ent = [(int(rng.integers(0, 6)),
+                100 + i if rng.random() > 0.3 else PAD_ID)
+               for i in range(int(rng.integers(0, 30)))]
+        kk, rr = make_slab(ent, 48)
+        nq = int(rng.integers(0, 10))
+        keys = pad_flat([int(rng.integers(0, 6)) for _ in range(nq)],
+                        16, PAD_KEY)
+        payload = pad_flat(list(range(nq)), 16, PAD_ID)
+        rows, out_pay, examined, overflow = probe_rows(
+            jnp.asarray(kk), jnp.asarray(rr), jnp.asarray(keys),
+            jnp.asarray(payload), cap=256,
+        )
+        want_matches, want_examined = probe_rows_ref(kk, rr, keys, payload)
+        got = sorted(
+            (int(m), int(p)) for m, p in
+            zip(np.asarray(rows), np.asarray(out_pay)) if m != PAD_ID
+        )
+        assert got == sorted(want_matches)
+        assert int(examined) == want_examined
+        assert int(overflow) == 0
+
+
+# ---------------------------------------------------------------------------
+# TTL / sliding-window timing semantics
+# ---------------------------------------------------------------------------
+def small_world(n=8, seed=0):
+    batch, forest = random_world(seed, n=n)
+    return batch, forest
+
+
+def test_ttl_row_expires_at_start_of_ttl_th_update():
+    """A row ingested at update U with ttl T is retired at the START of
+    update U + T — it survives exactly T - 1 further updates."""
+    batch, forest = small_world()
+    stream = StreamingEngine(forest, EngineConfig(rho=2.0))
+    stream.update(batch, ttl=2)
+    d = batch.num_trajectories
+    assert stream.live_size == d
+    stream.update(empty_batch())         # update 1: still inside the ttl
+    assert stream.live_size == d
+    res = stream.update(empty_batch())   # update 2 = U + T: swept on entry
+    assert stream.live_size == 0
+    assert res.stats["num_expired"] == d
+    assert stream.retired_total == d
+
+
+def test_window_ceilings_any_ttl():
+    """``window=N`` caps every row's residency at N updates, even when an
+    explicit longer ttl is passed (and supplies the default when none is)."""
+    batch, forest = small_world()
+    d = batch.num_trajectories
+    stream = StreamingEngine(forest, EngineConfig(rho=2.0), window=1)
+    stream.update(batch, ttl=5)          # ceiling: min(5, 1) = 1
+    assert stream.live_size == d
+    stream.update(empty_batch())
+    assert stream.live_size == 0
+    stream2 = StreamingEngine(forest, EngineConfig(rho=2.0), window=2)
+    stream2.update(batch)                # no ttl: the window is the default
+    stream2.update(empty_batch())
+    assert stream2.live_size == d
+    stream2.update(empty_batch())
+    assert stream2.live_size == 0
+
+
+def test_no_ttl_no_window_never_expires():
+    batch, forest = small_world()
+    stream = StreamingEngine(forest, EngineConfig(rho=2.0))
+    stream.update(batch)
+    for _ in range(4):
+        stream.update(empty_batch())
+    assert stream.live_size == batch.num_trajectories
+    assert stream.retired_total == 0
+
+
+# ---------------------------------------------------------------------------
+# retire(): validation + idempotency
+# ---------------------------------------------------------------------------
+def test_retire_validates_and_is_idempotent():
+    batch, forest = small_world()
+    stream = StreamingEngine(forest, EngineConfig(rho=2.0))
+    stream.update(batch)
+    n = stream.world_size
+    with pytest.raises(ValueError, match="cannot retire"):
+        stream.retire([n])
+    with pytest.raises(ValueError, match="cannot retire"):
+        stream.retire([-1])
+    assert stream.live_size == n  # refused calls changed nothing
+    assert stream.retire([0, 1]) == 2
+    assert stream.live_size == n - 2
+    assert stream.retire([0, 1]) == 0   # already dead: idempotent no-op
+    assert stream.retire([1, 2]) == 1   # mixed: only the live one counts
+    assert stream.retired_total == 3
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: admission control refuses BEFORE mutating
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("delta_join", ("host", "device"))
+def test_admission_refusal_leaves_world_untouched(delta_join):
+    batch, forest = random_world(3, n=24)
+    cfg = EngineConfig(rho=2.0, community_mode="components")
+    plan = ExecutionPlan(delta_join=delta_join)
+    small = make_batch(np.asarray(batch.places)[:4],
+                       np.asarray(batch.lengths)[:4])
+    big = make_batch(np.asarray(batch.places)[4:],
+                     np.asarray(batch.lengths)[4:])
+    stream = StreamingEngine(forest, cfg, plan)
+    twin = StreamingEngine(forest, cfg, plan)
+    stream.update(small)
+    twin.update(small)
+    # budget == current residency: any growth must be refused
+    stream.max_resident_bytes = stream.resident_bytes()
+    snap = (
+        stream.world_size, stream.live_size, stream.updates, stream._base,
+        stream.resident_bytes(), stream._acc_n,
+        stream._alive_np.copy(), stream._expiry_np.copy(),
+    )
+    with pytest.raises(CapacityExceeded) as exc:
+        stream.update(big)
+    assert exc.value.needed_bytes > exc.value.budget_bytes
+    after = (
+        stream.world_size, stream.live_size, stream.updates, stream._base,
+        stream.resident_bytes(), stream._acc_n,
+        stream._alive_np.copy(), stream._expiry_np.copy(),
+    )
+    for a, b in zip(snap, after):
+        np.testing.assert_array_equal(a, b)
+    # lift the budget: the SAME batch goes through, and the refusal left
+    # no residue — the stream matches a twin that was never refused
+    stream.max_resident_bytes = None
+    got = stream.update(big)
+    want = twin.update(big)
+    assert score_map(got) == score_map(want)
+    assert got.communities == want.communities
+
+
+def test_admission_refusal_at_construction_budget():
+    """A budget too small for even the first batch refuses update #1 and
+    the engine stays empty and usable."""
+    batch, forest = small_world()
+    stream = StreamingEngine(
+        forest, EngineConfig(rho=2.0), max_resident_bytes=8,
+    )
+    with pytest.raises(CapacityExceeded):
+        stream.update(batch)
+    assert stream.world_size == 0 and stream.updates == 0
+    stream.max_resident_bytes = None
+    res = stream.update(batch)
+    want = AnotherMeEngine(forest, EngineConfig(rho=2.0)).run(batch)
+    assert score_map(res) == score_map(want)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: hot buckets stay bounded under a sliding window
+# ---------------------------------------------------------------------------
+def test_hot_bucket_bounded_by_live_membership_under_window():
+    """A pathological world — every row produces the SAME keys — grows one
+    driver bucket list linearly in total ingested rows (the documented
+    quadratic wall).  Under ``window=2`` the eager host eviction keeps the
+    bucket at LIVE membership: the list plateaus instead of growing, and
+    the join stays exact."""
+    d, updates = 5, 6
+    places = np.tile(np.asarray([[3, 4, 5, 6]], np.int32), (d, 1))
+    lengths = np.full((d,), 4, np.int32)
+    _, forest = synthetic_setup(
+        d, num_types=4, classes_per_type=3, num_places=16,
+        min_len=4, max_len=4, seed=9,
+    )
+    cfg = EngineConfig(rho=2.0, community_mode="components")
+    stream = StreamingEngine(forest, cfg, window=2)
+    unbounded = StreamingEngine(forest, cfg)
+    peaks, peaks_unbounded = [], []
+    res = None
+    for u in range(updates):
+        res = stream.update(make_batch(places, lengths))
+        unbounded.update(make_batch(places, lengths))
+        assert stream._index.max_bucket_len() <= stream.live_size
+        peaks.append(stream._index.max_bucket_len())
+        peaks_unbounded.append(unbounded._index.max_bucket_len())
+    # bounded: the windowed peak plateaus at the steady-state live count
+    assert peaks[-1] == peaks[1] == 2 * d
+    # ...while the unwindowed engine's hot bucket keeps growing
+    assert peaks_unbounded[-1] == updates * d
+    # and the windowed world is still EXACT: final result == one-shot
+    # over the rows still inside the window
+    span = stream.n - stream._base
+    live = np.nonzero(stream._alive_np[:span])[0] + stream._base
+    assert live.size == 2 * d and np.all(np.diff(live) == 1)
+    want = AnotherMeEngine(forest, cfg).run(make_batch(
+        np.tile(places, (2, 1)), np.tile(lengths, 2),
+    ))
+    got_pairs = {
+        (int(a) - int(live[0]), int(b) - int(live[0]))
+        for (a, b) in score_map(res)
+    }
+    assert got_pairs == set(score_map(want))
+
+
+# ---------------------------------------------------------------------------
+# planning mirrors
+# ---------------------------------------------------------------------------
+def test_stream_join_stats_retire_compact_ledger():
+    st = StreamJoinStats(2)
+    k = np.asarray([5, 5, 9, 9, 9], np.int32)
+    o = np.asarray([1, 1, 0, 0, 0], np.int32)
+    st.commit(k, o)
+    assert st.counts == {5: 2, 9: 3}
+    np.testing.assert_array_equal(st.owner_entries, [3, 2])
+    assert st.dead_fraction() == 0.0
+    # retire one row's occurrences: counts stay (tombstones still occupy
+    # and are examined), only the dead ledger grows
+    st.retire(np.asarray([9, 9, 9], np.int32), np.asarray([0, 0, 0], np.int32))
+    assert st.counts == {5: 2, 9: 3}
+    np.testing.assert_array_equal(st.owner_entries, [3, 2])
+    assert st.dead_counts == {9: 3}
+    assert st.dead_fraction() == pytest.approx(1.0)  # owner 0 fully dead
+    # a fresh arrival under tombstones plans against the UNREclaimed
+    # counts — new-vs-old covers the tombstoned slots it will examine
+    nvo, nvn, ent = st.plan_update(
+        np.asarray([9], np.int32), np.asarray([0], np.int32)
+    )
+    assert nvo[0] == 3 and nvn[0] == 0 and ent[0] == 1
+    # compaction reclaims: emptied keys drop, partial keys shrink
+    st.retire(np.asarray([5], np.int32), np.asarray([1], np.int32))
+    st.compact()
+    assert st.counts == {5: 1}
+    assert st.dead_counts == {}
+    np.testing.assert_array_equal(st.owner_entries, [0, 1])
+    np.testing.assert_array_equal(st.owner_dead, [0, 0])
+    assert st.dead_fraction() == 0.0
+
+
+def test_shard_summaries_rebuild_matches_bruteforce():
+    rng = np.random.default_rng(23)
+    for n_sh in (1, 2, 4):
+        for trial in range(5):
+            n = int(rng.integers(0, 40))
+            first = int(rng.integers(0, 3)) * n_sh  # base stays owner-aligned
+            lengths = rng.integers(1, 12, size=n).astype(np.int64)
+            alive = rng.random(n) > 0.4
+            s = ShardSummaries(n_sh)
+            s.rebuild(first, lengths, alive)
+            rows = np.zeros(n_sh, np.int64)
+            max_len = np.zeros(n_sh, np.int64)
+            for i in range(n):
+                if alive[i]:
+                    sh = (first + i) % n_sh
+                    rows[sh] += 1
+                    max_len[sh] = max(max_len[sh], lengths[i])
+            np.testing.assert_array_equal(s.rows, rows)
+            np.testing.assert_array_equal(s.max_len, max_len)
+
+
+def test_union_find_reset_from_labels_roundtrip():
+    rng = np.random.default_rng(29)
+    n = 24
+    uf = UnionFind(n)
+    edges = [(int(a), int(b)) for a, b in rng.integers(0, n, size=(20, 2))]
+    for a, b in edges:
+        uf.union(a, b)
+    labels = uf.labels()
+    uf2 = UnionFind()
+    uf2.reset_from_labels(labels)
+    np.testing.assert_array_equal(uf2.labels(), labels)
+    # the restored forest keeps working incrementally in lockstep
+    more = [(int(a), int(b)) for a, b in rng.integers(0, n, size=(10, 2))]
+    for a, b in more:
+        assert uf.union(a, b) == uf2.union(a, b)
+    np.testing.assert_array_equal(uf2.labels(), uf.labels())
+    uf2.add(4)  # growth after a reset stays consistent
+    uf.add(4)
+    uf.union(n, n + 3)
+    uf2.union(n, n + 3)
+    np.testing.assert_array_equal(uf2.labels(), uf.labels())
