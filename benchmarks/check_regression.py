@@ -1,0 +1,128 @@
+"""Soft-fail perf-regression gate over BENCH_score.json.
+
+Compares a freshly measured score benchmark against the committed
+baseline (``git show HEAD:BENCH_score.json`` by default) and WARNS —
+never fails — when any matched cell moved more than the threshold in
+either direction.  Shared CI runners are far too noisy for a hard gate
+(the committed baseline was measured on a different machine entirely),
+but a 5x cliff that would previously sail through unnoticed now leaves a
+``::warning::`` annotation on the PR with the exact cell that moved.
+
+Rows match on (impl, P, H, L, prune_rate) and compare pairs/sec; overlap
+cells match on (n_shards, cap_local, pairs, overlap_chunks) and compare
+the overlap-vs-serial ratio.  Baselines with a different schema, backend
+or device count are skipped outright — a cross-machine comparison is not
+a regression signal.  Exit code is always 0; ``--hard`` exists for local
+use where the machine IS comparable.
+
+Usage::
+
+    ./run.sh -m benchmarks.bench_score --smoke --out BENCH_fresh.json
+    ./run.sh -m benchmarks.check_regression BENCH_fresh.json
+    ./run.sh -m benchmarks.check_regression BENCH_fresh.json \
+        --baseline BENCH_score.json --threshold 0.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def _load_baseline(spec: str):
+    """A baseline spec: 'git:<rev>' (committed file) or a plain path."""
+    if spec.startswith("git:"):
+        try:
+            out = subprocess.run(
+                ["git", "show", f"{spec[4:]}:BENCH_score.json"],
+                capture_output=True, text=True, check=True,
+            ).stdout
+        except (OSError, subprocess.CalledProcessError):
+            return None
+        return json.loads(out)
+    try:
+        with open(spec) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _row_key(r):
+    return (r["impl"], r["P"], r["H"], r["L"], r["prune_rate"])
+
+
+def _overlap_key(c):
+    return (c["n_shards"], c["cap_local"], c["pairs"], c["overlap_chunks"])
+
+
+def compare(fresh: dict, base: dict, threshold: float) -> list[str]:
+    """Warning strings for every matched cell past the threshold."""
+    warnings = []
+    for field in ("schema", "backend", "device_count"):
+        if fresh.get(field) != base.get(field):
+            return [
+                f"baseline not comparable ({field}: "
+                f"{base.get(field)!r} vs {fresh.get(field)!r}) — skipping"
+            ]
+    base_rows = {_row_key(r): r for r in base.get("rows", [])}
+    for r in fresh.get("rows", []):
+        b = base_rows.get(_row_key(r))
+        if b is None or not b.get("pairs_per_sec"):
+            continue
+        ratio = r["pairs_per_sec"] / b["pairs_per_sec"]
+        if abs(ratio - 1.0) > threshold:
+            verb = "slowdown" if ratio < 1.0 else "speedup"
+            warnings.append(
+                f"{r['impl']} P={r['P']} H={r['H']} L={r['L']} "
+                f"prune={r['prune_rate']}: {ratio:.2f}x {verb} "
+                f"({b['pairs_per_sec']:.0f} -> {r['pairs_per_sec']:.0f} "
+                f"pairs/s)"
+            )
+    base_ov = {_overlap_key(c): c
+               for c in base.get("overlap", {}).get("cells", [])}
+    for c in fresh.get("overlap", {}).get("cells", []):
+        b = base_ov.get(_overlap_key(c))
+        if b is None or not b.get("overlap_vs_serial"):
+            continue
+        ratio = c["overlap_vs_serial"] / b["overlap_vs_serial"]
+        if abs(ratio - 1.0) > threshold:
+            warnings.append(
+                f"overlap sh={c['n_shards']} P={c['pairs']} "
+                f"nc={c['overlap_chunks']}: overlap_vs_serial "
+                f"{b['overlap_vs_serial']} -> {c['overlap_vs_serial']}"
+            )
+    return warnings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly measured BENCH_score.json")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="'git:<rev>' or a path (default: git:HEAD)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="warn when |ratio - 1| exceeds this (default 0.20)")
+    ap.add_argument("--hard", action="store_true",
+                    help="exit 1 on warnings (local comparable machines)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    base = _load_baseline(args.baseline)
+    if base is None:
+        print(f"no baseline at {args.baseline!r} — nothing to compare")
+        return 0
+    warnings = compare(fresh, base, args.threshold)
+    if not warnings:
+        print(f"perf check: all matched cells within "
+              f"+/-{args.threshold:.0%} of {args.baseline}")
+        return 0
+    for w in warnings:
+        print(f"::warning title=perf drift::{w}")
+    print(f"{len(warnings)} cell(s) drifted past +/-{args.threshold:.0%} "
+          f"(soft-fail: informational on shared runners)")
+    return 1 if args.hard else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,11 +25,17 @@ class CapacityPlanner:
     floor_pow2:  minimum capacity is ``2**floor_pow2`` (keeps tiny worlds
                  from generating one jit cache entry per batch size).
     max_retries: doubling retries after an overflow before giving up.
+    autotune:    consult the cached :mod:`repro.perf` tuning table when
+                 planning score-stage kernel parameters (block sizes,
+                 diagonal dtypes).  Off by default: with no table on disk
+                 the lookup is a silent no-op, but plans should not even
+                 probe the filesystem unless asked.
     """
 
     slack: float = 1.10
     floor_pow2: int = 10
     max_retries: int = 3
+    autotune: bool = False
 
     def initial_capacity(self, expected_pairs: int) -> int:
         """Power-of-two capacity covering ``expected_pairs`` with slack."""
@@ -81,6 +87,23 @@ class CapacityPlanner:
             cand = build(capacity)
         return cand, capacity
 
+    def plan_tuning(self, pairs: int, levels: int, length: int):
+        """Tuned LCS kernel parameters for a score stage of this shape.
+
+        Returns the cached :class:`repro.perf.LCSTuning` for the
+        ``(pairs, levels, length)`` cell (nearest-P fallback) when
+        ``autotune=True`` and the table has a usable entry, else ``None``
+        — callers keep their defaults.  Like every tuning consultation
+        this resolves EAGERLY at plan/build time, never inside a trace:
+        the result becomes static kernel arguments, so autotuning can
+        change throughput but never shapes, traces, or results.
+        """
+        if not self.autotune:
+            return None
+        from repro.perf import TuningTable
+
+        return TuningTable.load().lookup(pairs, levels, length)
+
     def plan_sharded(
         self,
         keys_np,
@@ -91,6 +114,7 @@ class CapacityPlanner:
         lengths_np=None,
         prune_tau: float | None = None,
         betas_sum: float = 1.0,
+        overlap_chunks: int = 1,
     ):
         """Exact per-bucket capacity plan for the sharded (shard_map) path.
 
@@ -112,6 +136,7 @@ class CapacityPlanner:
             slack=self.slack if slack is None else slack,
             score_mode=score_mode,
             lengths_np=lengths_np, prune_tau=prune_tau, betas_sum=betas_sum,
+            overlap_chunks=overlap_chunks,
         )
 
     def plan_stream_join(

@@ -100,6 +100,26 @@ class ExecutionPlan:
     #                                 world keys nor the pair list transit
     #                                 the driver (core/device_index.py);
     #                                 ignored by AnotherMeEngine.run
+    autotune: bool = False          # consult the cached repro.perf tuning
+    #                                 table (TUNING.json) for score-stage
+    #                                 kernel parameters; resolved eagerly,
+    #                                 bit-identical results guaranteed
+    overlap_chunks: int = 1         # shuffle-mode gather/score overlap:
+    #                                 split the pair buffer into this many
+    #                                 chunks (power of two) so chunk i+1's
+    #                                 owner hops run while chunk i scores;
+    #                                 ignored in "replicate" mode and on
+    #                                 the delta_join="device" scoring path
+    #                                 (its pairs rest in-mesh under the
+    #                                 join plan's layout, which the exact
+    #                                 per-chunk planner cannot see)
+
+    def __post_init__(self):
+        oc = self.overlap_chunks
+        if oc < 1 or (oc & (oc - 1)):
+            raise ValueError(
+                f"overlap_chunks must be a power of two >= 1, got {oc}"
+            )
 
 
 class AnotherMeEngine:
@@ -127,6 +147,11 @@ class AnotherMeEngine:
         validate_lcs_impl(config.lcs_impl)
         if plan.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {plan.n_shards}")
+        oc = plan.overlap_chunks
+        if oc < 1 or (oc & (oc - 1)):
+            raise ValueError(
+                f"overlap_chunks must be a power of two >= 1, got {oc}"
+            )
         self.forest = forest
         self.config = config
         self.plan = plan
@@ -147,7 +172,8 @@ class AnotherMeEngine:
             )
         self.backend_ctx = BackendContext(k=config.k, num_types=forest.num_types)
         self.planner = CapacityPlanner(
-            slack=config.capacity_slack, max_retries=config.max_retries
+            slack=config.capacity_slack, max_retries=config.max_retries,
+            autotune=plan.autotune,
         )
         if plan.n_shards == 1:
             self._stages = (
@@ -212,13 +238,21 @@ class AnotherMeEngine:
     def _sharded_runner(self, dplan, key_fn, shapes):
         from repro.core.similarity import wavefront_dtype_from_env
 
+        # tuning resolves HERE — eagerly, at runner-build time — into
+        # static kernel args (never inside the trace); a miss (autotune
+        # off, no table, no matching cell) is None = untuned defaults
+        tuning = self.planner.plan_tuning(
+            dplan.pruned_cap or dplan.scored_cap,
+            self.forest.num_levels, shapes[1][1],
+        )
         # the runner build resolves REPRO_LCS_DTYPE (lcs_impl_fn); keying
-        # the cache on the resolved dtype keeps the A/B probe live across
-        # runs of one engine, matching the single-device path
+        # the cache on the resolved dtype AND the tuning record keeps the
+        # A/B probe and the tuning table live across runs of one engine,
+        # matching the single-device path
         cache_key = (
             dplan, self.plan.score_mode, self.config.lcs_impl,
             self.config.score_prune, key_fn is None, shapes,
-            wavefront_dtype_from_env(),
+            wavefront_dtype_from_env(), tuning,
         )
         runner = self._runner_cache.get(cache_key)
         if runner is None:
@@ -228,6 +262,7 @@ class AnotherMeEngine:
                 lcs_impl=self.config.lcs_impl,
                 score_prune=self.config.score_prune,
                 prune_tau=self.config.rho,
+                tuning=tuning,
             )
             self._runner_cache[cache_key] = runner
         return runner
@@ -282,7 +317,8 @@ class _ShardedEncodeJoinScoreStage:
                     )
                 dplan = eng.planner.plan_sharded(
                     keys_np, plan.n_shards, slack=plan.shard_slack,
-                    score_mode=plan.score_mode, **prune_kw,
+                    score_mode=plan.score_mode,
+                    overlap_chunks=plan.overlap_chunks, **prune_kw,
                 )
         key_fn = ctx.backend.shard_key_fn(ctx.backend_ctx)
 
@@ -334,5 +370,7 @@ class _ShardedEncodeJoinScoreStage:
                     scored_cap=dplan.scored_cap * 2,
                     owner_route_cap=dplan.owner_route_cap * 2,
                     pruned_cap=dplan.pruned_cap * 2,
+                    chunk_hop_cap=dplan.chunk_hop_cap * 2,
+                    chunk_rest_cap=dplan.chunk_rest_cap * 2,
                 )
         return out, dplan

@@ -196,6 +196,14 @@ class DistributedPlan:
     #                           owner hops; 0 -> uniform fallback
     pruned_cap: int = 0     # post-prune pairs per shard when the MSS
     #                         upper-bound pruning pass runs; 0 -> scored_cap
+    n_chunks: int = 1       # shuffle-mode overlap: split the pair buffer
+    #                         into this many chunks so chunk i+1's owner
+    #                         hops run while chunk i scores; 1 -> the
+    #                         original single-pass gather-then-score
+    chunk_hop_cap: int = 0  # rows per (src, dst) bucket in ONE chunk's
+    #                         owner hops; 0 -> uniform fallback
+    chunk_rest_cap: int = 0  # resting pairs per shard for ONE chunk;
+    #                          0 -> uniform fallback
 
 
 def plan_capacities(
@@ -209,6 +217,7 @@ def plan_capacities(
     lengths_np: np.ndarray | None = None,
     prune_tau: float | None = None,
     betas_sum: float = 1.0,
+    overlap_chunks: int = 1,
 ) -> DistributedPlan:
     """Host-side exact capacity planning from the actual join keys.
 
@@ -232,6 +241,16 @@ def plan_capacities(
     the device applies.  In ``score_mode="shuffle"`` pruning happens BEFORE
     the owner hops, so the hop buckets and the resting buffer are sized
     from survivors only.
+
+    ``overlap_chunks > 1`` (shuffle mode only) additionally sizes the
+    per-chunk hop/resting buffers for the overlapped gather: the pre-hop
+    pair buffer is split into that many contiguous slices, and because the
+    device buffer layout is DETERMINISTIC — ``dedup_pairs`` sorts by
+    (lo, hi) with PAD at the end, and the prune compaction preserves that
+    order — the planner can replay exactly which pairs land in which chunk
+    slice and size ``chunk_hop_cap`` / ``chunk_rest_cap`` from the actual
+    per-(chunk, owner) loads, keeping the overflow accounting exact under
+    chunking too.
     """
     n, s = keys_np.shape
     local_n = int(np.ceil(n / n_shards))
@@ -262,6 +281,7 @@ def plan_capacities(
     total_pairs = int(ranks.sum())
     owner_cap = 0
     pruned_cap = 0
+    chunk_hop = chunk_rest = 0
     if total_pairs <= exact_pair_limit:
         # materialize the pre-dedup pair list host-side (the driver's
         # statistics pass): element at sorted position p with in-run rank r
@@ -332,16 +352,51 @@ def plan_capacities(
             ) if surv.any() else 1
             pruned_cap = int(np.ceil(max(surv_need, 1) * slack)) + 64
         cap4 = int(np.ceil(max(scored_need, 1) * slack)) + 64
+        if score_mode == "shuffle" and overlap_chunks > 1:
+            # chunked-overlap planning: replay the deterministic device
+            # buffer layout — dedup_pairs sorts by (lo, hi) with PAD at the
+            # end (np.unique gives the same global order here) and the
+            # prune compaction preserves it — to find which surviving pair
+            # occupies which chunk slice of which shard's buffer, then size
+            # ONE chunk's hop buckets / resting buffer from the worst chunk
+            if prune:
+                pruned_cap += (-pruned_cap) % overlap_chunks
+                pre_cap = pruned_cap
+            else:
+                cap4 += (-cap4) % overlap_chunks
+                pre_cap = cap4
+            sub = pre_cap // overlap_chunks
+            sel = np.nonzero(surv)[0]
+            d_sel = ded_dst[sel]
+            rank = np.zeros(sel.shape[0], np.int64)
+            for s in range(n_shards):
+                m = d_sel == s
+                rank[m] = np.arange(int(m.sum()))
+            chunk_of = np.minimum(rank // sub, overlap_chunks - 1)
+            olo = ulo[sel] // local_n
+            ohi = uhi[sel] // local_n
+            ch1 = np.zeros((overlap_chunks, n_shards, n_shards), np.int64)
+            np.add.at(ch1, (chunk_of, d_sel, olo), 1)
+            ch2 = np.zeros((overlap_chunks, n_shards, n_shards), np.int64)
+            np.add.at(ch2, (chunk_of, olo, ohi), 1)
+            crest = np.zeros((overlap_chunks, n_shards), np.int64)
+            np.add.at(crest, (chunk_of, ohi), 1)
+            chunk_hop = int(np.ceil(max(ch1.max(), ch2.max(), 1) * slack)) + 64
+            chunk_rest = int(np.ceil(max(crest.max(), 1) * slack)) + 64
     else:
         # uniform-hash bound with extra slack (skew caught by overflow+retry)
         cap3 = int(
             np.ceil(max(total_pairs / (n_shards * n_shards), 1) * slack * 2)
         ) + 64
         cap4 = int(np.ceil(max(total_pairs / n_shards, 1) * slack * 2)) + 64
+        if score_mode == "shuffle" and overlap_chunks > 1:
+            cap4 += (-cap4) % overlap_chunks  # device needs even chunk slices
     return DistributedPlan(
         n_shards=n_shards, local_n=local_n, shingle_route_cap=cap1,
         local_pair_cap=cap2, pair_route_cap=cap3, scored_cap=cap4,
         owner_route_cap=owner_cap, pruned_cap=pruned_cap,
+        n_chunks=overlap_chunks if score_mode == "shuffle" else 1,
+        chunk_hop_cap=chunk_hop, chunk_rest_cap=chunk_rest,
     )
 
 
@@ -356,6 +411,7 @@ def make_sharded_pipeline(
     lcs_impl: str = "wavefront",
     score_prune: bool = False,
     prune_tau: float = 0.0,
+    tuning=None,
 ):
     """Build the jitted shard_map encode+join+score pipeline.
 
@@ -405,6 +461,24 @@ def make_sharded_pipeline(
     ``prune_tau``, and survivors are compacted into the planned
     ``pruned_cap`` buffer.  In "shuffle" mode this happens before the owner
     hops, so pruned pairs never travel.
+
+    With ``plan.n_chunks > 1`` (shuffle mode) the pair buffer is split into
+    chunks and the owner hops are SOFTWARE-PIPELINED: chunk 0's hops are
+    issued, then for each subsequent chunk the next hops are issued BEFORE
+    the previous chunk's resting pairs are scored, so the collective for
+    chunk i+1 and the LCS compute for chunk i have no data dependence and
+    the scheduler is free to overlap them (alpa's comm/compute overlap
+    discipline; on a single host the same split pays off as cache blocking
+    — one chunk's operands stay resident while it scores).  Chunking only
+    reorders WHICH rows travel together; every pair still hops and scores
+    exactly once with the same operands, so per-pair scores are
+    bit-identical and the overflow accounting stays exact (per-chunk
+    buffers come from the same exact-loads planner).  ``n_chunks`` is a
+    static plan field, so chunking adds zero steady-state recompiles.
+
+    ``tuning`` (optional :class:`repro.perf.LCSTuning`) is resolved
+    EAGERLY here at build time into static kernel args via
+    ``lcs_impl_fn`` — never inside the trace.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -412,9 +486,22 @@ def make_sharded_pipeline(
 
     n_shards = plan.n_shards
     fused_mode = FUSED_MODES.get(lcs_impl)
-    impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl)
+    impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl, tuning)
     out_cap = (plan.pruned_cap or plan.scored_cap) if score_prune \
         else plan.scored_cap
+    n_chunks = plan.n_chunks if score_mode == "shuffle" else 1
+    if n_chunks > 1:
+        if out_cap % n_chunks:
+            raise ValueError(
+                f"pair buffer ({out_cap}) must divide into n_chunks="
+                f"{n_chunks} slices; plan_capacities rounds it up"
+            )
+        _sub = out_cap // n_chunks
+        chunk_hop_cap = plan.chunk_hop_cap or (_sub // n_shards + 64)
+        chunk_rest_cap = plan.chunk_rest_cap or _sub
+        rest_total = n_chunks * chunk_rest_cap
+    else:
+        rest_total = out_cap
 
     def shard_fn(first, places, lengths, tables):
         # first: LOCAL keys rows (key_fn=None mode) or unused; places,
@@ -508,27 +595,45 @@ def make_sharded_pipeline(
                 )
                 mss = mss_scores(level_lcs, betas)
             ovf5 = jnp.zeros((), jnp.int32)
-        else:
+        elif n_chunks == 1:
             left, right, codes_l, codes_r, ovf5 = _gather_pair_codes(
                 left, right, codes, gid0, plan, n_shards, axis_name, out_cap
             )
-            if fused_mode is not None:
-                from repro.kernels.lcs.fused import fused_score
+            level_lcs, mss = _score_gathered(codes_l, codes_r, out_cap)
+        else:
+            # software-pipelined chunked gather+score: issue the owner hops
+            # for chunk i+1 BEFORE scoring chunk i's resting pairs, so the
+            # collective and the LCS compute have no data dependence
+            def hop(i):
+                sl = slice(i * _sub, (i + 1) * _sub)
+                return _hop_gather_codes(
+                    left[sl], right[sl], codes,
+                    owner_of=lambda g: g // plan.local_n,
+                    slot_of=lambda g: g - gid0,
+                    n_shards=n_shards, axis_name=axis_name,
+                    hop_cap=chunk_hop_cap, out_cap=chunk_rest_cap,
+                )
 
-                # the gather already happened via the owner hops; the fused
-                # kernel runs level-fused over the operand stacks via iota
-                iota = jnp.arange(out_cap, dtype=jnp.int32)
-                level_lcs, mss = fused_score(
-                    codes_l, _lengths_of(codes_l),
-                    codes_r, _lengths_of(codes_r), iota, iota, betas,
-                    mode=fused_mode,
+            parts = []
+            pending = hop(0)
+            for i in range(1, n_chunks):
+                nxt = hop(i)
+                parts.append(
+                    pending[:2]
+                    + _score_gathered(pending[2], pending[3], chunk_rest_cap)
+                    + (pending[4],)
                 )
-            else:
-                level_lcs = multi_level_lcs(
-                    codes_l, _lengths_of(codes_l),
-                    codes_r, _lengths_of(codes_r), impl=impl,
-                )
-                mss = mss_scores(level_lcs, betas)
+                pending = nxt
+            parts.append(
+                pending[:2]
+                + _score_gathered(pending[2], pending[3], chunk_rest_cap)
+                + (pending[4],)
+            )
+            left = jnp.concatenate([p[0] for p in parts])
+            right = jnp.concatenate([p[1] for p in parts])
+            level_lcs = jnp.concatenate([p[2] for p in parts])
+            mss = jnp.concatenate([p[3] for p in parts])
+            ovf5 = sum(p[4] for p in parts)
         mss = jnp.where(left == PAD_ID, -1.0, mss)
         overflow = jnp.stack([ovf1 + ovf2, ovf3, ovf4 + ovf5]).astype(jnp.int32)
         return left, right, level_lcs, mss, overflow, n_pruned.reshape(1)
@@ -536,6 +641,26 @@ def make_sharded_pipeline(
     def _lengths_of(code_rows):
         # lengths reconstructed from the padding sentinel in level 0
         return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
+
+    def _score_gathered(codes_l, codes_r, cap):
+        """Score one resting operand stack (post-hop) -> (level_lcs, mss).
+
+        The gather already happened via the owner hops, so the fused kernel
+        runs level-fused over the operand stacks via iota indices.
+        """
+        if fused_mode is not None:
+            from repro.kernels.lcs.fused import fused_score
+
+            iota = jnp.arange(cap, dtype=jnp.int32)
+            return fused_score(
+                codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r),
+                iota, iota, betas, mode=fused_mode,
+            )
+        lvl = multi_level_lcs(
+            codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r),
+            impl=impl,
+        )
+        return lvl, mss_scores(lvl, betas)
 
     def _gather_pair_codes(left, right, codes_local, gid0, plan, n, axis,
                            out_cap):
@@ -573,7 +698,7 @@ def make_sharded_pipeline(
         return {
             "left": left.reshape(n_shards, -1),
             "right": right.reshape(n_shards, -1),
-            "level_lcs": level_lcs.reshape(n_shards, out_cap, -1),
+            "level_lcs": level_lcs.reshape(n_shards, rest_total, -1),
             "mss": mss.reshape(n_shards, -1),
             "overflow": overflow.reshape(n_shards, -1),
             "pruned": pruned.reshape(n_shards),
@@ -597,9 +722,15 @@ class StreamShardPlan:
     n_shards: int
     cap_local: int   # physical world rows per shard (world cap / n_shards)
     pair_cap: int    # delta pairs per shard (host-assigned input slices)
-    hop_cap: int     # rows per (src, dst) bucket in the owner hops (shuffle)
-    out_cap: int     # resting pairs per shard after the hops; in
-    #                  "replicate" mode pairs score in place: == pair_cap
+    hop_cap: int     # rows per (src, dst) bucket in the owner hops (shuffle);
+    #                  with n_chunks > 1 this is the PER-CHUNK bucket size
+    out_cap: int     # resting pairs per shard after the hops (PER CHUNK when
+    #                  n_chunks > 1); in "replicate" mode pairs score in
+    #                  place: == pair_cap
+    n_chunks: int = 1  # shuffle-mode overlap: split each shard's pair slice
+    #                    into this many sub-chunks so chunk i+1's owner hops
+    #                    run while chunk i scores (power of two; must divide
+    #                    pair_cap)
 
 
 def _pow2(x: int, floor_pow2: int = 4) -> int:
@@ -614,6 +745,8 @@ def plan_stream_capacities(
     *,
     score_mode: str = "replicate",
     floor_pow2: int = 4,
+    overlap_chunks: int = 1,
+    pair_cap_floor: int = 0,
 ) -> StreamShardPlan:
     """Exact skew-aware capacity plan for ONE micro-batch's delta pairs.
 
@@ -627,33 +760,50 @@ def plan_stream_capacities(
     Capacities quantize to powers of two; the streaming engine keeps them
     sticky (monotone max over updates) so steady-state updates reuse the
     compiled runner.
+
+    ``overlap_chunks > 1`` (shuffle mode only) sizes the PER-CHUNK hop and
+    resting buffers for the software-pipelined gather: each shard's
+    ``pair_cap`` slice is split into that many sub-slices, and because the
+    host assigns pairs to slices deterministically (contiguous chunks,
+    front slots), the per-(chunk, owner) loads are exact.  Sticky plans may
+    hold ``pair_cap`` above this update's need, which MOVES the chunk
+    boundaries — ``pair_cap_floor`` (the sticky value) lets a fresh plan
+    compute chunk loads under the layout the runner will actually use.
     """
     p = int(lo.shape[0])
     chunk = -(-p // n_shards) if p else 0  # ceil
-    pair_cap = _pow2(chunk, floor_pow2)
+    pair_cap = max(_pow2(chunk, floor_pow2), pair_cap_floor or 0)
     if score_mode == "replicate":
         return StreamShardPlan(
             n_shards=n_shards, cap_local=cap_local, pair_cap=pair_cap,
             hop_cap=0, out_cap=pair_cap,
         )
+    n_chunks = max(int(overlap_chunks), 1)
+    sub = pair_cap // n_chunks if n_chunks > 1 else pair_cap
     if p:
         lo = np.asarray(lo, np.int64)
         hi = np.asarray(hi, np.int64)
-        src = np.arange(p, dtype=np.int64) // max(chunk, 1)
+        idx = np.arange(p, dtype=np.int64)
+        src = idx // max(chunk, 1)
+        pos = idx - src * max(chunk, 1)    # front slot in the shard's slice
+        cidx = np.minimum(pos // max(sub, 1), n_chunks - 1)
         own_lo = lo % n_shards
         own_hi = hi % n_shards
-        h1 = np.zeros((n_shards, n_shards), np.int64)
-        np.add.at(h1, (src, own_lo), 1)
-        h2 = np.zeros((n_shards, n_shards), np.int64)
-        np.add.at(h2, (own_lo, own_hi), 1)
+        h1 = np.zeros((n_chunks, n_shards, n_shards), np.int64)
+        np.add.at(h1, (cidx, src, own_lo), 1)
+        h2 = np.zeros((n_chunks, n_shards, n_shards), np.int64)
+        np.add.at(h2, (cidx, own_lo, own_hi), 1)
+        rest = np.zeros((n_chunks, n_shards), np.int64)
+        np.add.at(rest, (cidx, own_hi), 1)
         hop_need = int(max(h1.max(), h2.max()))
-        rest_need = int(np.bincount(own_hi, minlength=n_shards).max())
+        rest_need = int(rest.max())
     else:
         hop_need = rest_need = 1
     return StreamShardPlan(
         n_shards=n_shards, cap_local=cap_local, pair_cap=pair_cap,
         hop_cap=_pow2(hop_need, floor_pow2),
         out_cap=_pow2(rest_need, floor_pow2),
+        n_chunks=n_chunks,
     )
 
 
@@ -873,6 +1023,7 @@ def make_streaming_score_pipeline(
     trace_counter: list | None = None,
     score_prune: bool = False,
     prune_tau: float = 0.0,
+    tuning=None,
 ):
     """Build the jitted shard_map DELTA score program for streaming updates.
 
@@ -915,6 +1066,16 @@ def make_streaming_score_pipeline(
     and masked pairs are invalid to the router, so they never travel or
     gather code rows).  The surviving scored set is bit-identical to
     pruning host-side; the per-shard prune count returns as ``pruned``.
+
+    With ``plan.n_chunks > 1`` (shuffle mode) each shard's pair slice is
+    split into sub-chunks and the owner hops software-pipeline against
+    scoring exactly as in :func:`make_sharded_pipeline`: chunk i+1's hops
+    are issued before chunk i scores, per-pair results stay bit-identical,
+    and ``n_chunks`` is static in the plan so the zero-steady-state-
+    recompile contract (``trace_counter``) is untouched.
+
+    ``tuning`` (optional :class:`repro.perf.LCSTuning`) resolves eagerly
+    at build time into static kernel args via ``lcs_impl_fn``.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -922,12 +1083,39 @@ def make_streaming_score_pipeline(
 
     n_shards = plan.n_shards
     fused_mode = FUSED_MODES.get(lcs_impl)
-    impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl)
+    impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl, tuning)
     out_cap = plan.out_cap
+    n_chunks = plan.n_chunks if score_mode == "shuffle" else 1
+    if n_chunks > 1:
+        if plan.pair_cap % n_chunks:
+            raise ValueError(
+                f"pair_cap ({plan.pair_cap}) must divide into n_chunks="
+                f"{n_chunks} slices (both are powers of two)"
+            )
+        _sub = plan.pair_cap // n_chunks
+        rest_total = n_chunks * out_cap   # out_cap is PER CHUNK here
+    else:
+        rest_total = out_cap
 
     def _lengths_of(code_rows):
         # lengths reconstructed from the padding sentinel in level 0
         return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
+
+    def _score_gathered(codes_l, codes_r, cap):
+        """Score one resting operand stack (post-hop) -> (level_lcs, mss)."""
+        if fused_mode is not None:
+            from repro.kernels.lcs.fused import fused_score
+
+            iota = jnp.arange(cap, dtype=jnp.int32)
+            return fused_score(
+                codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r),
+                iota, iota, betas, mode=fused_mode,
+            )
+        lvl = multi_level_lcs(
+            codes_l, _lengths_of(codes_l), codes_r, _lengths_of(codes_r),
+            impl=impl,
+        )
+        return lvl, mss_scores(lvl, betas)
 
     def _phys(g, valid):
         # physical index of global id g in the round-robin world layout:
@@ -985,28 +1173,43 @@ def make_streaming_score_pipeline(
                 n_pruned = (jnp.sum(valid) - jnp.sum(keep)).astype(jnp.int32)
                 left = jnp.where(keep, left, PAD_ID)
                 right = jnp.where(keep, right, PAD_ID)
-            out_l, out_r, codes_l, codes_r, ovf = _hop_gather_codes(
-                left, right, codes,
-                owner_of=lambda g: g % n_shards,
-                slot_of=lambda g: g // n_shards,
-                n_shards=n_shards, axis_name=axis_name,
-                hop_cap=plan.hop_cap, out_cap=out_cap,
-            )
-            if fused_mode is not None:
-                from repro.kernels.lcs.fused import fused_score
+            def hop(l_part, r_part):
+                return _hop_gather_codes(
+                    l_part, r_part, codes,
+                    owner_of=lambda g: g % n_shards,
+                    slot_of=lambda g: g // n_shards,
+                    n_shards=n_shards, axis_name=axis_name,
+                    hop_cap=plan.hop_cap, out_cap=out_cap,
+                )
 
-                iota = jnp.arange(out_cap, dtype=jnp.int32)
-                level_lcs, mss = fused_score(
-                    codes_l, _lengths_of(codes_l),
-                    codes_r, _lengths_of(codes_r), iota, iota, betas,
-                    mode=fused_mode,
-                )
+            if n_chunks == 1:
+                out_l, out_r, codes_l, codes_r, ovf = hop(left, right)
+                level_lcs, mss = _score_gathered(codes_l, codes_r, out_cap)
             else:
-                level_lcs = multi_level_lcs(
-                    codes_l, _lengths_of(codes_l),
-                    codes_r, _lengths_of(codes_r), impl=impl,
+                # software pipeline: issue chunk i+1's owner hops BEFORE
+                # scoring chunk i's resting pairs (no data dependence
+                # between them, so the scheduler may overlap)
+                parts = []
+                pending = hop(left[:_sub], right[:_sub])
+                for i in range(1, n_chunks):
+                    sl = slice(i * _sub, (i + 1) * _sub)
+                    nxt = hop(left[sl], right[sl])
+                    parts.append(
+                        pending[:2]
+                        + _score_gathered(pending[2], pending[3], out_cap)
+                        + (pending[4],)
+                    )
+                    pending = nxt
+                parts.append(
+                    pending[:2]
+                    + _score_gathered(pending[2], pending[3], out_cap)
+                    + (pending[4],)
                 )
-                mss = mss_scores(level_lcs, betas)
+                out_l = jnp.concatenate([p[0] for p in parts])
+                out_r = jnp.concatenate([p[1] for p in parts])
+                level_lcs = jnp.concatenate([p[2] for p in parts])
+                mss = jnp.concatenate([p[3] for p in parts])
+                ovf = sum(p[4] for p in parts)
         mss = jnp.where(out_l == PAD_ID, -1.0, mss)
         return (out_l, out_r, level_lcs, mss,
                 ovf.reshape(1).astype(jnp.int32), n_pruned.reshape(1))
@@ -1026,7 +1229,7 @@ def make_streaming_score_pipeline(
         return {
             "left": out_l.reshape(n_shards, -1),
             "right": out_r.reshape(n_shards, -1),
-            "level_lcs": level_lcs.reshape(n_shards, out_cap, -1),
+            "level_lcs": level_lcs.reshape(n_shards, rest_total, -1),
             "mss": mss.reshape(n_shards, -1),
             "overflow": overflow.reshape(n_shards),
             "pruned": pruned.reshape(n_shards),

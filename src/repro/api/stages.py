@@ -58,7 +58,7 @@ def validate_lcs_impl(name: str) -> str:
     return name
 
 
-def lcs_impl_fn(name: str):
+def lcs_impl_fn(name: str, tuning=None):
     """jax-traceable batched LCS ``(a [B,L], b [B,L]) -> [B]`` for an impl name.
 
     Shared by the single-device score stage and the sharded shard_map score
@@ -66,6 +66,13 @@ def lcs_impl_fn(name: str):
     The fused family takes the code table plus pair indices rather than
     gathered operands, so it has no pairwise form — callers route it through
     ``kernels/lcs/fused.fused_score`` (see FUSED_MODES) instead.
+
+    ``tuning`` is an optional :class:`repro.perf.LCSTuning` record (from
+    ``CapacityPlanner.plan_tuning``), resolved HERE — at the call boundary,
+    eagerly, exactly like the REPRO_LCS_DTYPE probe — into static kernel
+    arguments (``block_b`` cap, wavefront dtype).  The returned closure
+    carries only static values, so a tuned impl traces identically to an
+    untuned one modulo those constants.
     """
     validate_lcs_impl(name)
     if name in FUSED_MODES:
@@ -76,15 +83,20 @@ def lcs_impl_fn(name: str):
         )
     if name in _KERNEL_MODES:
         from repro.kernels.lcs import ops as lcs_ops
+        from repro.perf import resolve_wavefront_dtype
 
         mode = _KERNEL_MODES[name]
-        dt = wavefront_dtype_from_env()  # resolved here, at the call boundary
-        return lambda a, b: lcs_ops.lcs(a, b, mode=mode, wavefront_dtype=dt)
+        dt = resolve_wavefront_dtype(tuning)  # env pin > tuned > default
+        kwargs = {} if tuning is None else {"block_b": tuning.block_b}
+        return lambda a, b: lcs_ops.lcs(
+            a, b, mode=mode, wavefront_dtype=dt, **kwargs
+        )
     from repro.core.similarity import lcs_ref, lcs_wavefront
+    from repro.perf import resolve_wavefront_dtype
 
     if name == "ref":
         return lcs_ref
-    dt = wavefront_dtype_from_env()
+    dt = resolve_wavefront_dtype(tuning)
     return lambda a, b: lcs_wavefront(a, b, dtype=dt)
 
 
@@ -194,15 +206,23 @@ class ScoreStage:
                 post_prune_capacity=int(cand.left.shape[0]),
             )
         with ctx.instr.phase("score"):
+            # tuning is consulted HERE — eager, outside any trace — and
+            # becomes static kernel args; None keeps the untuned defaults
+            P = int(cand.left.shape[0])
+            H, L = int(ctx.encoded.codes.shape[1]), int(ctx.encoded.codes.shape[2])
+            tuning = ctx.planner.plan_tuning(P, H, L)
             if impl in _KERNEL_MODES:
                 level_lcs, mss = _score_with_kernel(
-                    ctx.encoded, cand, ctx.betas, mode=_KERNEL_MODES[impl]
+                    ctx.encoded, cand, ctx.betas,
+                    mode=_KERNEL_MODES[impl], tuning=tuning,
                 )
             else:
+                from repro.perf import resolve_wavefront_dtype
+
                 level_lcs, mss = score_pairs(
                     ctx.encoded.codes, ctx.encoded.lengths,
                     cand.left, cand.right, ctx.betas, impl_name=impl,
-                    wavefront_dtype=wavefront_dtype_from_env(),
+                    wavefront_dtype=resolve_wavefront_dtype(tuning),
                 )
             mss.block_until_ready()
 
@@ -292,9 +312,14 @@ def prune_candidates(
     return pruned, int(valid.sum()) - len(idx)
 
 
-def _score_with_kernel(encoded, cand, betas, *, mode="auto"):
-    """Score candidates with the Pallas LCS kernel (kernels/lcs)."""
+def _score_with_kernel(encoded, cand, betas, *, mode="auto", tuning=None):
+    """Score candidates with the Pallas LCS kernel (kernels/lcs).
+
+    ``tuning`` (an optional LCSTuning) supplies a tuned ``block_b`` cap and
+    wavefront dtype as static dispatch args; None keeps the defaults.
+    """
     from repro.kernels.lcs import ops as lcs_ops
+    from repro.perf import resolve_wavefront_dtype
 
     li = jnp.where(cand.left == PAD_ID, 0, cand.left)
     ri = jnp.where(cand.right == PAD_ID, 0, cand.right)
@@ -302,5 +327,8 @@ def _score_with_kernel(encoded, cand, betas, *, mode="auto"):
     H, L = encoded.codes.shape[1], encoded.codes.shape[2]
     a = repad(encoded.codes[li], encoded.lengths[li], PAD_CODE_A).reshape(P * H, L)
     b = repad(encoded.codes[ri], encoded.lengths[ri], PAD_CODE_B).reshape(P * H, L)
-    level_lcs = lcs_ops.lcs(a, b, mode=mode).reshape(P, H)
+    kwargs = {} if tuning is None else {"block_b": tuning.block_b}
+    level_lcs = lcs_ops.lcs(
+        a, b, mode=mode, wavefront_dtype=resolve_wavefront_dtype(tuning), **kwargs
+    ).reshape(P, H)
     return level_lcs, mss_scores(level_lcs, betas)

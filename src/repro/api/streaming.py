@@ -961,6 +961,7 @@ class StreamingEngine:
         self._xfer["pair_rows"] += int(lo.shape[0])
         self._xfer["bytes_in"] += left_l.nbytes + right_l.nbytes
         jl, jr = jnp.asarray(left_l), jnp.asarray(right_l)
+        tuning = self.planner.plan_tuning(p_cap, self._H, self.L)
         if impl in _KERNEL_MODES:
             from repro.core.types import CandidatePairs
 
@@ -971,12 +972,16 @@ class StreamingEngine:
                 overflow=jnp.asarray(0, jnp.int32),
             )
             lvl, mss = _score_with_kernel(
-                enc, cand, self.betas, mode=_KERNEL_MODES[impl]
+                enc, cand, self.betas, mode=_KERNEL_MODES[impl],
+                tuning=tuning,
             )
         else:
+            from repro.perf import resolve_wavefront_dtype
+
             lvl, mss = score_pairs(
                 self._codes_dev, self._len_dev, jl, jr, self.betas,
-                impl_name=impl, wavefront_dtype=wavefront_dtype_from_env(),
+                impl_name=impl,
+                wavefront_dtype=resolve_wavefront_dtype(tuning),
             )
         k = lo.shape[0]
         return (left[:k], right[:k], np.asarray(lvl)[:k],
@@ -988,17 +993,25 @@ class StreamingEngine:
         # plan AND ship local ids — the plan's per-destination loads must
         # be computed under the same hashes the device program applies
         lo, hi = lo - self._base, hi - self._base
+        prev = self._stream_plan
+        sticky = prev is not None and prev.cap_local == cl
+        # pair_cap_floor: a sticky plan may hold pair_cap above this
+        # update's need, which moves the chunk-slice boundaries — the
+        # fresh plan must compute its per-chunk loads under the layout
+        # the runner will actually use
         splan = plan_stream_capacities(
             lo, hi, n_sh, cl, score_mode=self.plan.score_mode,
+            overlap_chunks=self.plan.overlap_chunks,
+            pair_cap_floor=prev.pair_cap if sticky else 0,
         )
-        prev = self._stream_plan
-        if prev is not None and prev.cap_local == cl:
+        if sticky:
             # sticky capacities: monotone max keeps the compiled runner hot
             splan = StreamShardPlan(
                 n_shards=n_sh, cap_local=cl,
                 pair_cap=max(splan.pair_cap, prev.pair_cap),
                 hop_cap=max(splan.hop_cap, prev.hop_cap),
                 out_cap=max(splan.out_cap, prev.out_cap),
+                n_chunks=splan.n_chunks,
             )
             if self.plan.score_mode == "replicate":
                 splan = dataclasses.replace(splan, out_cap=splan.pair_cap)
@@ -1032,8 +1045,12 @@ class StreamingEngine:
         """One cached streaming score runner per (plan, mode, impl, dtype,
         world shape, prune) — shared by the host-pair and device-pair
         paths so their cache keys cannot drift apart."""
+        # tuning resolves eagerly at build time (static kernel args); a
+        # miss is None = untuned defaults
+        tuning = self.planner.plan_tuning(splan.pair_cap, self._H, self.L)
         key = (splan, self.plan.score_mode, self.config.lcs_impl,
-               wavefront_dtype_from_env(), self.L, self._H, score_prune)
+               wavefront_dtype_from_env(), self.L, self._H, score_prune,
+               tuning)
         runner = self._runner_cache.get(key)
         if runner is None:
             runner = make_streaming_score_pipeline(
@@ -1044,6 +1061,7 @@ class StreamingEngine:
                 trace_counter=self.score_traces,
                 score_prune=score_prune,
                 prune_tau=self.config.rho,
+                tuning=tuning,
             )
             self._runner_cache[key] = runner
             self.runner_builds += 1

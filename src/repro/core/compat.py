@@ -11,6 +11,23 @@ from __future__ import annotations
 import jax
 
 
+def backend_name() -> str:
+    """The active jax backend ("cpu" / "tpu" / "gpu").
+
+    The single source of truth for backend probing: the LCS dispatchers
+    (kernels/lcs/ops.py, kernels/lcs/fused.py) and the perf tuning table
+    (repro.perf) all key off THIS function, so a test that monkeypatches it
+    redirects every dispatch decision at once — two independent probes can
+    never disagree about where the code is running.
+    """
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is a TPU (see :func:`backend_name`)."""
+    return backend_name() == "tpu"
+
+
 def make_mesh(axis_shapes, axis_names, *, devices=None) -> jax.sharding.Mesh:
     """``jax.make_mesh`` with Auto axis types where supported."""
     kwargs = {}

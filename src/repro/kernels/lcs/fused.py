@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import on_tpu as _on_tpu
 from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
 from repro.kernels.lcs.kernel import SENT_SHIFT, SENT_WINDOW
 
@@ -177,10 +178,6 @@ def fused_score_ref(
         table_a[left], len_a[left], table_b[right], len_b[right]
     )
     return lvl, mss_scores(lvl, betas)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def fused_score(

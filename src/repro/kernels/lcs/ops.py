@@ -3,10 +3,10 @@
 Pads the batch to the block size and dispatches to the Pallas kernel
 (interpret=True off-TPU so CPU tests execute the same kernel body).  The
 wrapper is shard-local-shape aware: it is traceable inside a shard_map
-program, where the batch is the per-shard pair buffer — the block size
-shrinks to the (power-of-two) batch size so a small shard never pads up to
-a full 512-row tile, and any remainder rows are sentinel-padded so they
-can never contribute a match.
+program, where the batch is the per-shard pair buffer — the block size is
+chosen to minimize padded waste (see :func:`_block_for`) so a small or
+just-past-a-boundary shard never pads up to a full 512-row tile, and any
+remainder rows are sentinel-padded so they can never contribute a match.
 
 ``mode`` selects the dispatch policy:
 
@@ -16,26 +16,47 @@ can never contribute a match.
                tests that must prove the kernel really runs.
   "interpret"  always the Pallas kernel with interpret=True, even on TPU.
   "wavefront"  always the jnp anti-diagonal wavefront.
+
+``block_b`` is the tile-size CAP, not the tile size: the dispatcher picks
+the waste-minimizing power of two at or under it.  Callers holding a tuned
+block size (repro.perf's autotune table, resolved eagerly at the call
+boundary — never inside a trace) pass it here and the same waste rule
+applies under the tuned cap.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.core.compat import on_tpu as _on_tpu
 from repro.kernels.lcs.kernel import lcs_pallas
 from repro.core.similarity import lcs_wavefront, wavefront_dtype_from_env
 
+# smallest tile worth launching a grid step for: below this, per-block
+# launch overhead dominates the padded-row waste the block would save
+_BLOCK_FLOOR = 128
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
+def _block_for(batch: int, block_b: int, *, floor: int = _BLOCK_FLOOR) -> int:
+    """Power-of-two block <= block_b minimizing padded rows, over a floor.
 
-def _block_for(batch: int, block_b: int) -> int:
-    """Largest power-of-two block <= block_b that does not over-pad batch."""
+    The old rule ("largest power of two <= batch") over-pads just past a
+    boundary: B=513 picked block 512, padding to 1024 (~50% wasted rows),
+    when block 128 pads only to 640.  Instead, every candidate power of two
+    in [min(floor, block_b), block_b] is scored by its padded batch size
+    ``ceil(B / b) * b``; the smallest padding wins, and ties go to the
+    LARGER block (fewer grid steps for the same rows).
+    """
+    cap = max(1, block_b)
+    lo = min(floor, cap)
+    best_b, best_padded = None, None
     b = 1
-    while b < batch and b < block_b:
+    while b <= cap:
+        if b >= lo:
+            padded = -(-batch // b) * b  # ceil(batch / b) * b
+            if best_padded is None or padded <= best_padded:
+                best_b, best_padded = b, padded
         b *= 2
-    return b
+    return best_b
 
 
 def lcs(
@@ -55,7 +76,9 @@ def lcs(
     and the wavefront are jitted themselves), and it is the call boundary
     where the REPRO_LCS_DTYPE probe is resolved into the wavefront's static
     ``dtype`` argument (``wavefront_dtype=None`` -> read the env var here,
-    never inside a trace).
+    never inside a trace).  Tuned parameters flow in the same way: the
+    engine resolves the autotune table eagerly and passes ``block_b`` /
+    ``wavefront_dtype`` as static arguments.
     """
     if mode not in ("auto", "pallas", "interpret", "wavefront"):
         raise ValueError(

@@ -6,12 +6,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import on_tpu as _on_tpu
 from repro.core.minhash import _hash_params
 from repro.kernels.minhash.kernel import minhash_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("num_perm", "seed", "block_b"))

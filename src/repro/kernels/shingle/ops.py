@@ -11,13 +11,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import on_tpu as _on_tpu
 from repro.core.shingling import num_shingles
 from repro.core.types import PAD_KEY
 from repro.kernels.shingle.kernel import shingle_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(

@@ -12,11 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import on_tpu as _on_tpu
 from repro.kernels.ssd.kernel import ssd_intra_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

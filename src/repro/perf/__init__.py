@@ -1,0 +1,10 @@
+"""Performance autotuning for the score stage (see perf/tuning.py)."""
+from repro.perf.tuning import (  # noqa: F401
+    DEFAULT_PATH,
+    LCSTuning,
+    SCHEMA,
+    TuningTable,
+    quantize_pairs,
+    resolve_wavefront_dtype,
+    tuning_path,
+)

@@ -31,6 +31,15 @@ x {wavefront, fused-interpret} streaming runs must produce bit-identical
 ``EngineResult``s, and a real-dispatch proof (``BucketIndex.insert``
 monkeypatched with a counter) shows the device path keeps the join state
 in-mesh: the driver-resident bucket table is NEVER consulted.
+
+ISSUE 9 adds the AUTOTUNE + OVERLAP axis: a tuning table with NON-default
+parameters (block_b=128, int32 diagonals) plus ``overlap_chunks`` in
+{2, 4} must stay bit-identical to the untuned serial defaults across
+{wavefront, fused-interpret} x SHARDS x {replicate, shuffle}, one-shot
+and streaming — with a real-dispatch proof that the tuned record reaches
+``lcs_impl_fn`` — and the chunked shuffle runner's per-update trace
+history must EQUAL the unchunked one (hop/score overlap adds zero
+steady-state recompiles).
 """
 import os
 
@@ -321,7 +330,22 @@ for mode in ("replicate", "shuffle"):
     assert traces[-1] == traces[0], (mode, traces)
     assert n_calls[-1] == n_calls[0], (mode, n_calls)
     assert st.runner_builds == 1, (mode, st.runner_builds)
-print("OK stream recompile", traces, len(calls))
+
+# hop/score overlap adds ZERO recompiles: the chunked shuffle runner's
+# full per-update trace history (and runner-build count) must EQUAL the
+# unchunked one — any world-growth recompile the serial path takes is
+# allowed, any EXTRA trace from chunking is not
+hist = {}
+for oc in (1, 2):
+    st = StreamingEngine(
+        forest, EngineConfig(rho=2.0, lcs_impl="fused-interpret"),
+        ExecutionPlan(n_shards=2, score_mode="shuffle", overlap_chunks=oc),
+        world_capacity=B * K,
+    )
+    hist[oc] = ([st.update(block_batch(u)).stats["score_traces"]
+                 for u in range(K)], st.runner_builds)
+assert hist[1] == hist[2], hist
+print("OK stream recompile", traces, len(calls), hist[2])
 """
 
 
@@ -332,6 +356,168 @@ def test_streaming_updates_reuse_cached_sharded_runner():
     the cached runner with zero recompiles."""
     out = run_subprocess(STREAM_RECOMPILE_CODE, devices=4)
     assert "OK stream recompile" in out
+
+
+AUTOTUNE_OVERLAP_MATRIX_CODE = r"""
+import os
+import tempfile
+
+import numpy as np
+import repro.api.stages as stages
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.core.types import PAD_ID
+from repro.data import fig1_world
+
+# a throwaway tuning table with NON-default parameters: block_b=128
+# (default cap 512) and int32 diagonals (env default int8) — parity must
+# hold precisely because tuned values may only change throughput
+os.environ.pop("REPRO_LCS_DTYPE", None)
+os.environ["REPRO_TUNING_PATH"] = os.path.join(
+    tempfile.mkdtemp(), "TUNING.json"
+)
+from repro.perf import LCSTuning, TuningTable
+
+batch, forest = fig1_world()
+L = int(np.asarray(batch.places).shape[1])
+TUNED = LCSTuning(block_b=128, wavefront_dtype="int32")
+table = TuningTable()
+table.record(1024, forest.num_levels, L, TUNED)  # nearest-P covers all P
+table.save()
+
+seen = []
+real = stages.lcs_impl_fn
+
+def recording(name, tuning=None):
+    seen.append(tuning)
+    return real(name, tuning)
+
+stages.lcs_impl_fn = recording
+
+RHO = 3.0
+
+
+def score_map(res):
+    left = np.asarray(res.scored.left)
+    right = np.asarray(res.scored.right)
+    mss = np.asarray(res.scored.mss)
+    lvl = np.asarray(res.scored.level_lcs)
+    keep = left != PAD_ID
+    return {
+        (int(a), int(b)): (float(m), tuple(int(x) for x in lv))
+        for a, b, m, lv in zip(left[keep], right[keep], mss[keep], lvl[keep])
+    }
+
+
+for impl in ("wavefront", "fused-interpret"):
+    cfg = EngineConfig(backend="ssh", rho=RHO, lcs_impl=impl)
+    seen.clear()
+    want = AnotherMeEngine(forest, cfg).run(batch)
+    # untuned runs never see a tuning record (autotune=False never probes)
+    assert all(t is None for t in seen), seen
+    for n_shards in %(shards)s:
+        modes = ("replicate", "shuffle") if n_shards > 1 else ("replicate",)
+        for mode in modes:
+            for oc in ((2, 4) if mode == "shuffle" else (4,)):
+                seen.clear()
+                res = AnotherMeEngine(
+                    forest, cfg,
+                    ExecutionPlan(n_shards=n_shards, score_mode=mode,
+                                  autotune=True, overlap_chunks=oc),
+                ).run(batch)
+                cell = (impl, n_shards, mode, oc)
+                assert res.similar_pairs == want.similar_pairs, cell
+                assert res.communities == want.communities, cell
+                assert score_map(res) == score_map(want), cell
+                if impl == "wavefront" and n_shards > 1:
+                    # real-dispatch proof: the tuned record reached the
+                    # impl closure (not silently missed to defaults)
+                    assert TUNED in seen, (cell, seen)
+print("OK autotune overlap matrix")
+"""
+
+
+def test_autotune_overlap_parity_matrix():
+    """Autotune + overlap axis: non-default tuned kernel parameters and
+    chunked hop/score overlap stay bit-identical to the untuned serial
+    defaults across the full one-shot matrix, with a real-dispatch proof
+    that the tuned record reaches the impl closure."""
+    out = run_subprocess(
+        AUTOTUNE_OVERLAP_MATRIX_CODE % {"shards": SHARDS}, devices=DEVICES
+    )
+    assert "OK autotune overlap matrix" in out
+
+
+STREAM_AUTOTUNE_OVERLAP_CODE = r"""
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+from repro.api import EngineConfig, ExecutionPlan, StreamingEngine
+from repro.core.types import PAD_ID, TrajectoryBatch
+from repro.data import synthetic_setup
+
+os.environ.pop("REPRO_LCS_DTYPE", None)
+os.environ["REPRO_TUNING_PATH"] = os.path.join(
+    tempfile.mkdtemp(), "TUNING.json"
+)
+from repro.perf import LCSTuning, TuningTable
+
+batch, forest = synthetic_setup(24, num_types=6, classes_per_type=3,
+                                num_places=40, seed=3)
+L = int(np.asarray(batch.places).shape[1])
+table = TuningTable()
+table.record(1024, forest.num_levels, L,
+             LCSTuning(block_b=128, wavefront_dtype="int32"))
+table.save()
+
+RHO = 2.0
+
+
+def split(batch, k):
+    P = np.asarray(batch.places); Ln = np.asarray(batch.lengths)
+    cuts = np.linspace(0, P.shape[0], k + 1).astype(int)
+    return [TrajectoryBatch(places=jnp.asarray(P[a:b]),
+                            lengths=jnp.asarray(Ln[a:b]),
+                            user_id=jnp.arange(b - a, dtype=jnp.int32))
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+def score_map(res):
+    left = np.asarray(res.scored.left)
+    right = np.asarray(res.scored.right)
+    mss = np.asarray(res.scored.mss)
+    keep = left != PAD_ID
+    return {(int(a), int(b)): float(m)
+            for a, b, m in zip(left[keep], right[keep], mss[keep])}
+
+
+for impl in ("wavefront", "fused-interpret"):
+    cfg = EngineConfig(rho=RHO, lcs_impl=impl, community_mode="components")
+    ref = StreamingEngine(forest, cfg).update_many(split(batch, 3))
+    for dj in ("host", "device"):
+        for oc in (2, 4):
+            st = StreamingEngine(
+                forest, cfg,
+                ExecutionPlan(n_shards=2, score_mode="shuffle",
+                              delta_join=dj, autotune=True,
+                              overlap_chunks=oc),
+            )
+            res = st.update_many(split(batch, 3))
+            cell = (impl, dj, oc)
+            assert res.similar_pairs == ref.similar_pairs, cell
+            assert res.communities == ref.communities, cell
+            assert score_map(res) == score_map(ref), cell
+print("OK stream autotune overlap")
+"""
+
+
+def test_streaming_autotune_overlap_parity():
+    """Streaming axis of the autotune + overlap matrix: tuned parameters
+    plus chunked shuffle scoring stay bit-identical to the single-device
+    streaming reference across both delta_join paths."""
+    out = run_subprocess(STREAM_AUTOTUNE_OVERLAP_CODE, devices=4)
+    assert "OK stream autotune overlap" in out
 
 
 DELTA_JOIN_MATRIX_CODE = r"""

@@ -98,6 +98,49 @@ class TestLCSBlockPad:
         np.testing.assert_array_equal(got, want)
 
 
+class TestBlockFor:
+    """ops._block_for picks the pow2 tile minimizing padded batch (ISSUE 9
+    satellite: 513 rows under block_b=512 used to pad to 1024 — one whole
+    wasted block — instead of 5 x 128 = 640)."""
+
+    def test_waste_minimization(self):
+        from repro.kernels.lcs.ops import _block_for
+
+        assert _block_for(513, 512) == 128   # 640 padded, not 1024
+        assert _block_for(512, 512) == 512   # exact fit keeps the big tile
+        assert _block_for(1024, 512) == 512  # ties resolve to the largest
+        assert _block_for(640, 512) == 128   # 640 exact under 128
+        assert _block_for(100, 512) == 128   # floor: one 128 block
+
+    def test_block_b_is_a_cap(self):
+        from repro.kernels.lcs.ops import _block_for
+
+        # a small explicit cap (e.g. a tuned value) lowers the floor too
+        assert _block_for(1000, 64) == 64
+        assert _block_for(3, 4) == 4
+        assert _block_for(1, 1) == 1
+
+    @pytest.mark.parametrize("B", [513, 640, 1000])
+    def test_golden_at_non_pow2_batches(self, B):
+        # the waste-minimized tile must stay bit-identical to the reference
+        from repro.kernels.lcs.ops import lcs
+        from repro.kernels.lcs.ref import lcs as ref
+
+        rng = np.random.default_rng(B)
+        L = 10
+        la = rng.integers(1, L + 1, size=B)
+        lb = rng.integers(1, L + 1, size=B)
+        a = rng.integers(0, 6, size=(B, L)).astype(np.int32)
+        b = rng.integers(0, 6, size=(B, L)).astype(np.int32)
+        a, b = _sentinel_pad(a, b, la, lb)
+        got = np.asarray(
+            lcs(jnp.asarray(a), jnp.asarray(b), block_b=512,
+                mode="interpret")
+        )
+        want = np.asarray(ref(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(got, want)
+
+
 class TestFusedGolden:
     """The fused gather-and-score kernel vs its jnp gather-then-score
     oracle: bit-identical level_lcs AND mss on the edge geometry."""
