@@ -1,18 +1,62 @@
 """Fig. 10 — QA1/QA2 accuracy vs N per approach (synthetic).
 
 The reproduction target: AnotherMe == 100% on both metrics at every N;
-MinHash/BRP degrade (BRP worst)."""
+MinHash/BRP degrade (BRP worst).
+
+``--subtraj`` runs the subtrajectory variant of the same figure: engines
+in windowed-candidate mode (``EngineConfig(subtraj_window=W)``) against a
+brute-force windowed truth that scores EVERY window pair — the exact
+backends must stay at 100% while the approximate hashes degrade, now on
+"find a matching hour" instead of "find a matching life".  Completeness
+of the exact backends holds because the defaults satisfy
+``rho >= (k - 1) * sum(betas)``: any window pair with MSS > rho has a
+type-LCS >= k at some level, hence shares a k-shingle and is a candidate.
+"""
 from __future__ import annotations
 
-from benchmarks.common import APPROACHES, Row, centralized_truth, make_engine
+from benchmarks.common import (
+    APPROACHES, Row, centralized_truth, make_engine, windowed_truth,
+)
 from repro.core import qa1, qa2
 from repro.data import synthetic_setup
 
 GRID_QUICK = (300, 600)
 GRID_FULL = (1_000, 2_000)
 
+# Subtrajectory grids are smaller: the truth is O((N * nw)^2) window pairs.
+SUBTRAJ_GRID_QUICK = (100, 200)
+SUBTRAJ_GRID_FULL = (300, 600)
+SUBTRAJ_WINDOW = 8
 
-def run(full: bool = False) -> list[Row]:
+
+def _run_subtraj(full: bool) -> list[Row]:
+    rows = []
+    for n in (SUBTRAJ_GRID_FULL if full else SUBTRAJ_GRID_QUICK):
+        # longer rows than the whole-trajectory grid so windows are real
+        # subtrajectories (nw = L - W + 1 = 13 windows per row), same
+        # forest shape as the base figure
+        batch, forest = synthetic_setup(
+            n, num_types=10, classes_per_type=5, num_places=500, seed=0,
+            min_len=10, max_len=20,
+        )
+        cen_pairs, cen_comms = windowed_truth(
+            batch, forest, window=SUBTRAJ_WINDOW
+        )
+        for name, backend in APPROACHES.items():
+            res = make_engine(
+                forest, backend, subtraj_window=SUBTRAJ_WINDOW
+            ).run(batch)
+            rows.append(Row(
+                f"fig10-subtraj/{name}/N={n}/W={SUBTRAJ_WINDOW}", 0.0,
+                f"QA1={qa1(res.communities, cen_comms):.3f};"
+                f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}",
+            ))
+    return rows
+
+
+def run(full: bool = False, subtraj: bool = False) -> list[Row]:
+    if subtraj:
+        return _run_subtraj(full)
     rows = []
     for n in (GRID_FULL if full else GRID_QUICK):
         batch, forest = synthetic_setup(
@@ -27,3 +71,19 @@ def run(full: bool = False) -> list[Row]:
                 f"QA2={qa2(res.similar_pairs, cen_pairs):.3f}",
             ))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Fig. 10 accuracy table (CSV: name,us,QA1;QA2)"
+    )
+    ap.add_argument("--full", action="store_true", help="paper-size grid")
+    ap.add_argument(
+        "--subtraj", action="store_true",
+        help="subtrajectory variant: windowed engines vs windowed truth",
+    )
+    args = ap.parse_args()
+    for row in run(full=args.full, subtraj=args.subtraj):
+        print(row.csv())

@@ -39,10 +39,34 @@ from repro.core.types import CandidatePairs, EncodedBatch, PAD_KEY, TrajectoryBa
 
 @dataclasses.dataclass(frozen=True)
 class BackendContext:
-    """Static pipeline facts a backend may need (from config + forest)."""
+    """Static pipeline facts a backend may need (from config + forest).
+
+    ``window``/``stride`` carry the subtrajectory mode
+    (``EngineConfig(subtraj_window=W, subtraj_stride=s)``): when ``window``
+    is set, every backend keys the SLIDING WINDOWS of each trajectory
+    instead of the whole row — key row ``t * nw + j`` holds window j of
+    trajectory t (see :mod:`repro.core.subtraj`), so the join emits
+    candidate pairs in (traj, offset) window coordinates.
+    """
 
     k: int
     num_types: int
+    window: int | None = None
+    stride: int = 1
+
+
+def _windowed_view(types, lengths, ctx: BackendContext):
+    """The key-input view: windows-as-virtual-rows when subtraj is on.
+
+    [N, L] type codes -> [N*nw, W] window rows + [N*nw] window lengths
+    (identity when ``ctx.window`` is None), shared by every registered
+    backend so the windowed key layout cannot drift between them.
+    """
+    if ctx.window is None:
+        return types, lengths
+    from repro.core.shingling import windowed_types
+
+    return windowed_types(types, lengths, window=ctx.window, stride=ctx.stride)
 
 
 class CandidateBackend:
@@ -110,8 +134,11 @@ class SSHBackend(CandidateBackend):
     def join_keys(self, encoded, batch, ctx):
         from repro.core.shingling import shingles_from_types
 
+        types, lengths = _windowed_view(
+            type_codes(encoded), encoded.lengths, ctx
+        )
         return shingles_from_types(
-            type_codes(encoded), encoded.lengths,
+            types, lengths,
             k=ctx.k, num_types=ctx.num_types, dedup=self.dedup,
         )
 
@@ -119,8 +146,9 @@ class SSHBackend(CandidateBackend):
         from repro.core.shingling import shingles_from_types
 
         def key_fn(local_types, local_lengths):
+            types, lengths = _windowed_view(local_types, local_lengths, ctx)
             return shingles_from_types(
-                local_types, local_lengths,
+                types, lengths,
                 k=ctx.k, num_types=ctx.num_types, dedup=self.dedup,
             )
 
@@ -137,17 +165,19 @@ class MinHashBackend(CandidateBackend):
     name: str = dataclasses.field(default="minhash", init=False)
 
     def join_keys(self, encoded, batch, ctx):
+        types, lengths = _windowed_view(
+            type_codes(encoded), encoded.lengths, ctx
+        )
         sig = minhash_signatures(
-            type_codes(encoded), encoded.lengths,
-            num_perm=self.num_perm, seed=self.seed,
+            types, lengths, num_perm=self.num_perm, seed=self.seed,
         )
         return minhash_band_keys(sig, bands=self.bands)
 
     def shard_key_fn(self, ctx):
         def key_fn(local_types, local_lengths):
+            types, lengths = _windowed_view(local_types, local_lengths, ctx)
             sig = minhash_signatures(
-                local_types, local_lengths,
-                num_perm=self.num_perm, seed=self.seed,
+                types, lengths, num_perm=self.num_perm, seed=self.seed,
             )
             return minhash_band_keys(sig, bands=self.bands)
 
@@ -164,16 +194,20 @@ class BRPBackend(CandidateBackend):
     name: str = dataclasses.field(default="brp", init=False)
 
     def join_keys(self, encoded, batch, ctx):
+        types, lengths = _windowed_view(
+            type_codes(encoded), encoded.lengths, ctx
+        )
         return brp_bucket_keys(
-            type_codes(encoded), encoded.lengths,
+            types, lengths,
             num_types=ctx.num_types, num_proj=self.num_proj,
             bucket_length=self.bucket_length, seed=self.seed,
         )
 
     def shard_key_fn(self, ctx):
         def key_fn(local_types, local_lengths):
+            types, lengths = _windowed_view(local_types, local_lengths, ctx)
             return brp_bucket_keys(
-                local_types, local_lengths,
+                types, lengths,
                 num_types=ctx.num_types, num_proj=self.num_proj,
                 bucket_length=self.bucket_length, seed=self.seed,
             )
@@ -202,6 +236,18 @@ class UDFBackend(CandidateBackend):
             )
         types = np.asarray(type_codes(encoded))
         lengths = np.asarray(encoded.lengths)
+        if ctx.window is not None:
+            # host-side windows-as-virtual-rows (the black box stays a
+            # row-at-a-time loop; only its input view changes)
+            from repro.core.subtraj import num_windows
+
+            L = types.shape[1]
+            W, s = min(ctx.window, L), ctx.stride
+            nw = num_windows(L, ctx.window, s)
+            offs = np.arange(nw, dtype=np.int32) * s
+            pos = np.clip(offs[:, None] + np.arange(W), 0, L - 1)
+            types = types[:, pos].reshape(-1, W)
+            lengths = (lengths[:, None] - offs[None, :]).clip(0, W).reshape(-1)
         per_row: list[set[int]] = []
         for i in range(types.shape[0]):
             row = types[i, : lengths[i]].tolist()

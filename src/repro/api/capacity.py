@@ -115,6 +115,7 @@ class CapacityPlanner:
         prune_tau: float | None = None,
         betas_sum: float = 1.0,
         overlap_chunks: int = 1,
+        windows_per_row: int = 1,
     ):
         """Exact per-bucket capacity plan for the sharded (shard_map) path.
 
@@ -128,6 +129,11 @@ class CapacityPlanner:
         post-prune pair buffer (``DistributedPlan.pruned_cap``) from the
         exact per-shard survivor counts of the MSS upper-bound pruning
         pass.
+
+        ``windows_per_row > 1`` declares subtrajectory keys (one key row
+        per sliding window, ``nw`` windows per trajectory): loads stay
+        per-window, shard ownership stays per-trajectory, and
+        ``lengths_np`` must then be per-window lengths.
         """
         from repro.api.sharded import plan_capacities
 
@@ -136,7 +142,7 @@ class CapacityPlanner:
             slack=self.slack if slack is None else slack,
             score_mode=score_mode,
             lengths_np=lengths_np, prune_tau=prune_tau, betas_sum=betas_sum,
-            overlap_chunks=overlap_chunks,
+            overlap_chunks=overlap_chunks, windows_per_row=windows_per_row,
         )
 
     def plan_stream_join(

@@ -74,6 +74,17 @@ class EngineConfig:
     capacity_slack: float = 1.10
     community_mode: str = "cliques"  # "cliques" | "components"
     max_retries: int = 3
+    subtraj_window: int | None = None  # subtrajectory mode: key + score
+    #                                 sliding windows of width W instead of
+    #                                 whole trajectories; candidate pairs
+    #                                 carry (traj, offset) window ids and a
+    #                                 host max-over-windows reduction folds
+    #                                 scores back to trajectory pairs
+    #                                 (core/subtraj.py).  W >= L degenerates
+    #                                 to whole-trajectory results.
+    subtraj_stride: int = 1         # window start stride s (offsets 0, s,
+    #                                 2s, ...); ignored unless
+    #                                 subtraj_window is set
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,7 +181,27 @@ class AnotherMeEngine:
                 "keys and only supports ExecutionPlan(n_shards=1); use a "
                 "registered key-based backend for sharded execution"
             )
-        self.backend_ctx = BackendContext(k=config.k, num_types=forest.num_types)
+        if config.subtraj_window is not None:
+            if config.subtraj_window < 1:
+                raise ValueError(
+                    f"subtraj_window must be positive, got "
+                    f"{config.subtraj_window}"
+                )
+            if config.subtraj_stride < 1:
+                raise ValueError(
+                    f"subtraj_stride must be positive, got "
+                    f"{config.subtraj_stride}"
+                )
+            if not self.backend.supports_sharded:
+                raise ValueError(
+                    f"candidate backend {self.backend.name!r} produces no "
+                    "join keys; the subtrajectory mode needs key-based "
+                    "candidates to carry (traj, offset) window coordinates"
+                )
+        self.backend_ctx = BackendContext(
+            k=config.k, num_types=forest.num_types,
+            window=config.subtraj_window, stride=config.subtraj_stride,
+        )
         self.planner = CapacityPlanner(
             slack=config.capacity_slack, max_retries=config.max_retries,
             autotune=plan.autotune,
@@ -235,7 +266,7 @@ class AnotherMeEngine:
             )
         return self._mesh
 
-    def _sharded_runner(self, dplan, key_fn, shapes):
+    def _sharded_runner(self, dplan, key_fn, shapes, subtraj=None):
         from repro.core.similarity import wavefront_dtype_from_env
 
         # tuning resolves HERE — eagerly, at runner-build time — into
@@ -252,7 +283,7 @@ class AnotherMeEngine:
         cache_key = (
             dplan, self.plan.score_mode, self.config.lcs_impl,
             self.config.score_prune, key_fn is None, shapes,
-            wavefront_dtype_from_env(), tuning,
+            wavefront_dtype_from_env(), tuning, subtraj,
         )
         runner = self._runner_cache.get(cache_key)
         if runner is None:
@@ -263,6 +294,7 @@ class AnotherMeEngine:
                 score_prune=self.config.score_prune,
                 prune_tau=self.config.rho,
                 tuning=tuning,
+                subtraj=subtraj,
             )
             self._runner_cache[cache_key] = runner
         return runner
@@ -290,6 +322,18 @@ class _ShardedEncodeJoinScoreStage:
         eng = self.engine
         plan, config, instr = eng.plan, eng.config, ctx.instr
 
+        # subtrajectory mode: (window, stride, nw) from the PADDED length —
+        # static shape facts every layer below keys its caches on
+        subtraj = None
+        if config.subtraj_window is not None:
+            from repro.core.subtraj import num_windows
+
+            L = int(ctx.batch.places.shape[1])
+            subtraj = (
+                min(config.subtraj_window, L), config.subtraj_stride,
+                num_windows(L, config.subtraj_window, config.subtraj_stride),
+            )
+
         with instr.phase("keys"):
             # coarsest-level view for planning only: [N, L], not the
             # [N, n_levels, L] code table (which stays device-resident)
@@ -305,25 +349,40 @@ class _ShardedEncodeJoinScoreStage:
         # (same data) skip the numpy planning pass and any retry doublings
         with instr.phase("plan"):
             plan_key = (keys_np.shape, hash(keys_np.tobytes()),
-                        plan.score_mode)
+                        plan.score_mode, subtraj)
             dplan = eng._plan_cache.get(plan_key)
             if dplan is None:
                 prune_kw = {}
                 if config.score_prune:
+                    # windowed pairs prune on per-WINDOW lengths: the key
+                    # matrix has one row per window, and the MSS bound of a
+                    # window pair is betas_sum * min of the window lengths
+                    if subtraj is None:
+                        lengths_np = np.asarray(ctx.batch.lengths)
+                    else:
+                        from repro.core.subtraj import window_lengths
+
+                        lengths_np = window_lengths(
+                            np.asarray(ctx.batch.lengths),
+                            max_len=int(ctx.batch.places.shape[1]),
+                            window=subtraj[0], stride=subtraj[1],
+                        )
                     prune_kw = dict(
-                        lengths_np=np.asarray(ctx.batch.lengths),
+                        lengths_np=lengths_np,
                         prune_tau=config.rho,
                         betas_sum=float(np.asarray(eng.betas, np.float32).sum()),
                     )
                 dplan = eng.planner.plan_sharded(
                     keys_np, plan.n_shards, slack=plan.shard_slack,
                     score_mode=plan.score_mode,
-                    overlap_chunks=plan.overlap_chunks, **prune_kw,
+                    overlap_chunks=plan.overlap_chunks,
+                    windows_per_row=1 if subtraj is None else subtraj[2],
+                    **prune_kw,
                 )
         key_fn = ctx.backend.shard_key_fn(ctx.backend_ctx)
 
         with instr.phase("execute"):
-            out, dplan = self._execute(ctx, dplan, key_fn, keys_np)
+            out, dplan = self._execute(ctx, dplan, key_fn, keys_np, subtraj)
         eng._plan_cache[plan_key] = dplan
         instr.record(
             shard_plan=dataclasses.asdict(dplan),
@@ -338,6 +397,36 @@ class _ShardedEncodeJoinScoreStage:
         level_lcs = np.asarray(out["level_lcs"])
         level_lcs = level_lcs.reshape(-1, level_lcs.shape[-1])
         valid = left != PAD_ID
+        if subtraj is not None:
+            # fold scored window pairs to trajectory pairs (max-over-
+            # windows) before anything downstream sees them — communities,
+            # similar_pairs, and the returned scored buffer all speak
+            # trajectory ids
+            from repro.core.subtraj import aggregate_window_pairs
+
+            tl, tr, tlvl, tmss = aggregate_window_pairs(
+                left, right, level_lcs, mss, nw=subtraj[2]
+            )
+            ctx.scored = ScoredPairs(
+                left=jnp.asarray(tl), right=jnp.asarray(tr),
+                level_lcs=jnp.asarray(tlvl), mss=jnp.asarray(tmss),
+                count=jnp.asarray(tl.shape[0], jnp.int32),
+                overflow=jnp.asarray(
+                    int(np.asarray(out["overflow"]).sum()), jnp.int32),
+            )
+            ctx.similar_pairs = {
+                (int(a), int(b))
+                for a, b, m in zip(tl, tr, tmss)
+                if m > np.float32(config.rho)
+            }
+            instr.record(
+                num_candidates=int(valid.sum()),
+                num_window_pairs=int(valid.sum()),
+                num_traj_pairs=int(tl.shape[0]),
+                num_similar=len(ctx.similar_pairs),
+                subtraj_windows=subtraj[2],
+            )
+            return
         ctx.scored = ScoredPairs(
             left=jnp.asarray(left), right=jnp.asarray(right),
             level_lcs=jnp.asarray(level_lcs), mss=jnp.asarray(mss),
@@ -350,13 +439,13 @@ class _ShardedEncodeJoinScoreStage:
             num_similar=len(ctx.similar_pairs),
         )
 
-    def _execute(self, ctx, dplan, key_fn, keys_np):
+    def _execute(self, ctx, dplan, key_fn, keys_np, subtraj=None):
         eng = self.engine
         batch = ctx.batch
         first = jnp.asarray(keys_np) if key_fn is None else batch.places
         shapes = (first.shape, batch.places.shape, ctx.tables.shape)
         for attempt in range(eng.planner.max_retries + 1):
-            runner = eng._sharded_runner(dplan, key_fn, shapes)
+            runner = eng._sharded_runner(dplan, key_fn, shapes, subtraj)
             out = runner(first, batch.places, batch.lengths, ctx.tables)
             out["mss"].block_until_ready()
             if int(np.asarray(out["overflow"]).sum()) == 0:

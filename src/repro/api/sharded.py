@@ -218,6 +218,7 @@ def plan_capacities(
     prune_tau: float | None = None,
     betas_sum: float = 1.0,
     overlap_chunks: int = 1,
+    windows_per_row: int = 1,
 ) -> DistributedPlan:
     """Host-side exact capacity planning from the actual join keys.
 
@@ -251,15 +252,26 @@ def plan_capacities(
     slice and size ``chunk_hop_cap`` / ``chunk_rest_cap`` from the actual
     per-(chunk, owner) loads, keeping the overflow accounting exact under
     chunking too.
+
+    ``windows_per_row > 1`` declares subtrajectory keys: ``keys_np`` has one
+    row PER WINDOW (``n = n_traj * nw``, window id ``t * nw + j``), while
+    shards own whole TRAJECTORIES.  ``local_n`` stays in trajectory units
+    and every ownership computation maps a window id to its trajectory
+    first (``id // nw``); per-window loads (shuffle 1, the join, the dedup
+    shuffle) are still counted exactly per window row.  ``lengths_np``, when
+    given, must then be per-WINDOW lengths ``[n_traj * nw]`` so the prune
+    replay indexes it with window ids directly.
     """
     n, s = keys_np.shape
-    local_n = int(np.ceil(n / n_shards))
+    nw = windows_per_row
+    local_n = int(np.ceil((n // nw) / n_shards))
     keys_flat = keys_np.reshape(-1)
     ids_flat = np.repeat(np.arange(n, dtype=np.int64), s)
     valid = keys_flat != PAD_KEY
     kf, idf = keys_flat[valid], ids_flat[valid]
-    # shuffle 1 loads: rows from one src shard to one dst shard
-    src = idf // local_n
+    # shuffle 1 loads: rows from one src shard to one dst shard (a window
+    # row lives on the shard owning its trajectory)
+    src = (idf // nw) // local_n
     dst = _positive_hash_np(kf) % n_shards
     load1 = np.zeros((n_shards, n_shards), np.int64)
     np.add.at(load1, (src, dst), 1)
@@ -325,8 +337,8 @@ def plan_capacities(
             # owner(right).  Pruning happens before the hops, so with it on
             # only survivors travel — hop buckets and the resting buffer
             # are sized from the survivor subset.
-            own_lo = (ulo // local_n)[surv]
-            own_hi = (uhi // local_n)[surv]
+            own_lo = ((ulo // nw) // local_n)[surv]
+            own_hi = ((uhi // nw) // local_n)[surv]
             h1 = np.zeros((n_shards, n_shards), np.int64)
             np.add.at(h1, (ded_dst[surv], own_lo), 1)
             h2 = np.zeros((n_shards, n_shards), np.int64)
@@ -373,8 +385,8 @@ def plan_capacities(
                 m = d_sel == s
                 rank[m] = np.arange(int(m.sum()))
             chunk_of = np.minimum(rank // sub, overlap_chunks - 1)
-            olo = ulo[sel] // local_n
-            ohi = uhi[sel] // local_n
+            olo = (ulo[sel] // nw) // local_n
+            ohi = (uhi[sel] // nw) // local_n
             ch1 = np.zeros((overlap_chunks, n_shards, n_shards), np.int64)
             np.add.at(ch1, (chunk_of, d_sel, olo), 1)
             ch2 = np.zeros((overlap_chunks, n_shards, n_shards), np.int64)
@@ -412,6 +424,7 @@ def make_sharded_pipeline(
     score_prune: bool = False,
     prune_tau: float = 0.0,
     tuning=None,
+    subtraj: tuple[int, int, int] | None = None,
 ):
     """Build the jitted shard_map encode+join+score pipeline.
 
@@ -479,12 +492,29 @@ def make_sharded_pipeline(
     ``tuning`` (optional :class:`repro.perf.LCSTuning`) is resolved
     EAGERLY here at build time into static kernel args via
     ``lcs_impl_fn`` — never inside the trace.
+
+    ``subtraj=(W, stride, nw)`` switches the pipeline to subtrajectory
+    mode: the per-shard key rows are the nw sliding WINDOWS of each local
+    trajectory (``key_fn`` windows in-mesh; precomputed ``first`` keys are
+    already windowed host-side), every candidate id is a WINDOW id
+    ``t * nw + j`` carrying (traj, offset) coordinates end-to-end, shard
+    ownership stays per-TRAJECTORY (``plan.local_n`` is in trajectory
+    units, see ``plan_capacities(windows_per_row=...)``), the owner hops
+    still move the full [H, L] trajectory rows exactly once per pair side,
+    and scoring windows them in-register (fused kernel) or via a width-W
+    gather (jnp impls).  All three values are static, so subtrajectory
+    runs compile their own specialization and ``subtraj=None`` traces are
+    byte-identical to the pre-windowing pipeline.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.api.stages import FUSED_MODES, lcs_impl_fn
 
     n_shards = plan.n_shards
+    if subtraj is not None:
+        W, stride, nw = subtraj
+    else:
+        W, stride, nw = 0, 1, 1
     fused_mode = FUSED_MODES.get(lcs_impl)
     impl = None if fused_mode is not None else lcs_impl_fn(lcs_impl, tuning)
     out_cap = (plan.pruned_cap or plan.scored_cap) if score_prune \
@@ -520,7 +550,16 @@ def make_sharded_pipeline(
 
         s = keys.shape[1]
         flat_keys = keys.reshape(-1)
-        flat_ids = jnp.repeat(jnp.arange(plan.local_n, dtype=jnp.int32) + gid0, s)
+        if subtraj is None:
+            flat_ids = jnp.repeat(
+                jnp.arange(plan.local_n, dtype=jnp.int32) + gid0, s
+            )
+        else:
+            # one key row per WINDOW: global window ids t * nw + j for the
+            # local trajectories t in [gid0, gid0 + local_n)
+            flat_ids = jnp.repeat(
+                jnp.arange(plan.local_n * nw, dtype=jnp.int32) + gid0 * nw, s
+            )
         valid = flat_keys != PAD_KEY
         dest = _positive_hash(flat_keys) % n_shards
         (rk, rid), ovf1 = _route(
@@ -559,8 +598,17 @@ def make_sharded_pipeline(
             pl_valid = left != PAD_ID
             sl = jnp.where(pl_valid, left, 0)
             sr = jnp.where(pl_valid, right, 0)
-            keep = _prune_keep(lengths_all[sl], lengths_all[sr], betas,
-                               prune_tau, pl_valid)
+            if subtraj is None:
+                len_l, len_r = lengths_all[sl], lengths_all[sr]
+            else:
+                # per-WINDOW lengths from the [N] trajectory lengths
+                len_l = jnp.clip(
+                    lengths_all[sl // nw] - (sl % nw) * stride, 0, W
+                )
+                len_r = jnp.clip(
+                    lengths_all[sr // nw] - (sr % nw) * stride, 0, W
+                )
+            keep = _prune_keep(len_l, len_r, betas, prune_tau, pl_valid)
             n_keep = jnp.sum(keep).astype(jnp.int32)
             n_pruned = jnp.sum(pl_valid).astype(jnp.int32) - n_keep
             order = jnp.argsort(jnp.logical_not(keep), stable=True)
@@ -580,7 +628,30 @@ def make_sharded_pipeline(
             codes_all = jax.lax.all_gather(codes, axis_name, axis=0, tiled=True)
             li = jnp.where(left == PAD_ID, 0, left)
             ri = jnp.where(right == PAD_ID, 0, right)
-            if fused_mode is not None:
+            if subtraj is not None:
+                # window ids -> (traj, offset); score the [H, W] slices
+                ta, oa = li // nw, (li % nw) * stride
+                tb, ob = ri // nw, (ri % nw) * stride
+                len_all = _lengths_of(codes_all)
+                if fused_mode is not None:
+                    from repro.kernels.lcs.fused import fused_windowed_score
+
+                    level_lcs, mss = fused_windowed_score(
+                        codes_all, len_all, codes_all, len_all,
+                        ta, tb, oa, ob, betas, window=W, mode=fused_mode,
+                    )
+                else:
+                    from repro.core.similarity import gather_windows
+
+                    level_lcs = multi_level_lcs(
+                        gather_windows(codes_all[ta], oa, W),
+                        jnp.clip(len_all[ta] - oa, 0, W),
+                        gather_windows(codes_all[tb], ob, W),
+                        jnp.clip(len_all[tb] - ob, 0, W),
+                        impl=impl,
+                    )
+                    mss = mss_scores(level_lcs, betas)
+            elif fused_mode is not None:
                 from repro.kernels.lcs.fused import fused_score
 
                 len_all = _lengths_of(codes_all)
@@ -599,7 +670,8 @@ def make_sharded_pipeline(
             left, right, codes_l, codes_r, ovf5 = _gather_pair_codes(
                 left, right, codes, gid0, plan, n_shards, axis_name, out_cap
             )
-            level_lcs, mss = _score_gathered(codes_l, codes_r, out_cap)
+            level_lcs, mss = _score_gathered(codes_l, codes_r, out_cap,
+                                             left, right)
         else:
             # software-pipelined chunked gather+score: issue the owner hops
             # for chunk i+1 BEFORE scoring chunk i's resting pairs, so the
@@ -608,27 +680,28 @@ def make_sharded_pipeline(
                 sl = slice(i * _sub, (i + 1) * _sub)
                 return _hop_gather_codes(
                     left[sl], right[sl], codes,
-                    owner_of=lambda g: g // plan.local_n,
-                    slot_of=lambda g: g - gid0,
+                    owner_of=lambda g: (g if subtraj is None else g // nw)
+                    // plan.local_n,
+                    slot_of=lambda g: (g if subtraj is None else g // nw)
+                    - gid0,
                     n_shards=n_shards, axis_name=axis_name,
                     hop_cap=chunk_hop_cap, out_cap=chunk_rest_cap,
+                )
+
+            def score_chunk(p):
+                return (
+                    p[:2]
+                    + _score_gathered(p[2], p[3], chunk_rest_cap, p[0], p[1])
+                    + (p[4],)
                 )
 
             parts = []
             pending = hop(0)
             for i in range(1, n_chunks):
                 nxt = hop(i)
-                parts.append(
-                    pending[:2]
-                    + _score_gathered(pending[2], pending[3], chunk_rest_cap)
-                    + (pending[4],)
-                )
+                parts.append(score_chunk(pending))
                 pending = nxt
-            parts.append(
-                pending[:2]
-                + _score_gathered(pending[2], pending[3], chunk_rest_cap)
-                + (pending[4],)
-            )
+            parts.append(score_chunk(pending))
             left = jnp.concatenate([p[0] for p in parts])
             right = jnp.concatenate([p[1] for p in parts])
             level_lcs = jnp.concatenate([p[2] for p in parts])
@@ -642,12 +715,35 @@ def make_sharded_pipeline(
         # lengths reconstructed from the padding sentinel in level 0
         return jnp.sum(code_rows[:, 0, :] >= 0, axis=-1).astype(jnp.int32)
 
-    def _score_gathered(codes_l, codes_r, cap):
+    def _score_gathered(codes_l, codes_r, cap, left=None, right=None):
         """Score one resting operand stack (post-hop) -> (level_lcs, mss).
 
         The gather already happened via the owner hops, so the fused kernel
-        runs level-fused over the operand stacks via iota indices.
+        runs level-fused over the operand stacks via iota indices.  In
+        subtrajectory mode the hops moved FULL trajectory rows and the
+        resting ``left``/``right`` window ids decode each pair's window
+        offsets here, at the point of scoring.
         """
+        if subtraj is not None:
+            oa = (jnp.where(left == PAD_ID, 0, left) % nw) * stride
+            ob = (jnp.where(right == PAD_ID, 0, right) % nw) * stride
+            la, lb = _lengths_of(codes_l), _lengths_of(codes_r)
+            if fused_mode is not None:
+                from repro.kernels.lcs.fused import fused_windowed_score
+
+                iota = jnp.arange(cap, dtype=jnp.int32)
+                return fused_windowed_score(
+                    codes_l, la, codes_r, lb, iota, iota, oa, ob, betas,
+                    window=W, mode=fused_mode,
+                )
+            from repro.core.similarity import gather_windows
+
+            lvl = multi_level_lcs(
+                gather_windows(codes_l, oa, W), jnp.clip(la - oa, 0, W),
+                gather_windows(codes_r, ob, W), jnp.clip(lb - ob, 0, W),
+                impl=impl,
+            )
+            return lvl, mss_scores(lvl, betas)
         if fused_mode is not None:
             from repro.kernels.lcs.fused import fused_score
 
@@ -676,8 +772,9 @@ def make_sharded_pipeline(
         cap = plan.owner_route_cap or (out_cap // n + 64)
         return _hop_gather_codes(
             left, right, codes_local,
-            owner_of=lambda g: g // plan.local_n,
-            slot_of=lambda g: g - gid0,
+            owner_of=lambda g: (g if subtraj is None else g // nw)
+            // plan.local_n,
+            slot_of=lambda g: (g if subtraj is None else g // nw) - gid0,
             n_shards=n, axis_name=axis, hop_cap=cap, out_cap=out_cap,
         )
 
@@ -747,6 +844,7 @@ def plan_stream_capacities(
     floor_pow2: int = 4,
     overlap_chunks: int = 1,
     pair_cap_floor: int = 0,
+    windows_per_row: int = 1,
 ) -> StreamShardPlan:
     """Exact skew-aware capacity plan for ONE micro-batch's delta pairs.
 
@@ -769,6 +867,15 @@ def plan_stream_capacities(
     hold ``pair_cap`` above this update's need, which MOVES the chunk
     boundaries — ``pair_cap_floor`` (the sticky value) lets a fresh plan
     compute chunk loads under the layout the runner will actually use.
+
+    ``windows_per_row > 1`` declares the delta pair ids to be WINDOW ids
+    (``t * nw + j``, see :mod:`repro.core.subtraj`): round-robin ownership
+    is then per TRAJECTORY (``owner = (id // nw) % n_shards``), matching
+    the resident world layout where only whole trajectory rows are stored.
+    (The StreamingEngine itself rejects subtrajectory mode — a growing
+    world max-length would re-number every stored window id — but the
+    planner stays windows-aware so batch-style callers can size streaming
+    score programs over windowed deltas.)
     """
     p = int(lo.shape[0])
     chunk = -(-p // n_shards) if p else 0  # ceil
@@ -787,8 +894,8 @@ def plan_stream_capacities(
         src = idx // max(chunk, 1)
         pos = idx - src * max(chunk, 1)    # front slot in the shard's slice
         cidx = np.minimum(pos // max(sub, 1), n_chunks - 1)
-        own_lo = lo % n_shards
-        own_hi = hi % n_shards
+        own_lo = (lo // windows_per_row) % n_shards
+        own_hi = (hi // windows_per_row) % n_shards
         h1 = np.zeros((n_chunks, n_shards, n_shards), np.int64)
         np.add.at(h1, (cidx, src, own_lo), 1)
         h2 = np.zeros((n_chunks, n_shards, n_shards), np.int64)

@@ -195,10 +195,23 @@ class ScoreStage:
     def run(self, ctx: PipelineContext) -> None:
         cfg, cand = ctx.config, ctx.candidates
         impl = validate_lcs_impl(cfg.lcs_impl)
+        L = int(ctx.encoded.codes.shape[2])
+        subtraj = _subtraj_of(cfg, L)
         if getattr(cfg, "score_prune", False):
             with ctx.instr.phase("prune"):
+                if subtraj is None:
+                    prune_lengths = ctx.encoded.lengths
+                else:
+                    # windowed candidates index per-WINDOW lengths: the MSS
+                    # bound of a window pair is betas_sum * min(wlen_a, wlen_b)
+                    from repro.core.subtraj import window_lengths
+
+                    prune_lengths = window_lengths(
+                        np.asarray(ctx.encoded.lengths), max_len=L,
+                        window=subtraj[0], stride=subtraj[1],
+                    )
                 cand, num_pruned = prune_candidates(
-                    cand, ctx.encoded.lengths, ctx.betas, cfg.rho, ctx.planner
+                    cand, prune_lengths, ctx.betas, cfg.rho, ctx.planner
                 )
             ctx.candidates = cand
             ctx.instr.record(
@@ -209,9 +222,13 @@ class ScoreStage:
             # tuning is consulted HERE — eager, outside any trace — and
             # becomes static kernel args; None keeps the untuned defaults
             P = int(cand.left.shape[0])
-            H, L = int(ctx.encoded.codes.shape[1]), int(ctx.encoded.codes.shape[2])
+            H = int(ctx.encoded.codes.shape[1])
             tuning = ctx.planner.plan_tuning(P, H, L)
-            if impl in _KERNEL_MODES:
+            if subtraj is not None:
+                level_lcs, mss = _score_windowed(
+                    ctx.encoded, cand, ctx.betas, impl, subtraj, tuning
+                )
+            elif impl in _KERNEL_MODES:
                 level_lcs, mss = _score_with_kernel(
                     ctx.encoded, cand, ctx.betas,
                     mode=_KERNEL_MODES[impl], tuning=tuning,
@@ -225,6 +242,33 @@ class ScoreStage:
                     wavefront_dtype=resolve_wavefront_dtype(tuning),
                 )
             mss.block_until_ready()
+
+        if subtraj is not None:
+            # fold scored window pairs to trajectory pairs (max-over-
+            # windows); downstream stages and the result speak traj ids
+            from repro.core.subtraj import aggregate_window_pairs
+
+            tl, tr, tlvl, tmss = aggregate_window_pairs(
+                cand.left, cand.right, level_lcs, mss, nw=subtraj[2]
+            )
+            ctx.similar_pairs = {
+                (int(a), int(b))
+                for a, b, m in zip(tl, tr, tmss)
+                if m > np.float32(cfg.rho)
+            }
+            ctx.scored = ScoredPairs(
+                left=jnp.asarray(tl), right=jnp.asarray(tr),
+                level_lcs=jnp.asarray(tlvl), mss=jnp.asarray(tmss),
+                count=jnp.asarray(tl.shape[0], jnp.int32),
+                overflow=cand.overflow,
+            )
+            ctx.instr.record(
+                num_window_pairs=int(cand.count),
+                num_traj_pairs=int(tl.shape[0]),
+                num_similar=len(ctx.similar_pairs),
+                subtraj_windows=subtraj[2],
+            )
+            return
 
         left_np = np.asarray(cand.left)
         right_np = np.asarray(cand.right)
@@ -310,6 +354,72 @@ def prune_candidates(
         count=jnp.asarray(len(idx), jnp.int32), overflow=cand.overflow,
     )
     return pruned, int(valid.sum()) - len(idx)
+
+
+def _subtraj_of(cfg, max_len: int):
+    """``(window, stride, nw)`` of the subtrajectory mode, or None.
+
+    The effective window caps at the padded length (W >= L degenerates to
+    whole-trajectory) and ``nw`` derives from the PADDED length, so the
+    triple is a static shape fact (see repro.core.subtraj)."""
+    if getattr(cfg, "subtraj_window", None) is None:
+        return None
+    from repro.core.subtraj import num_windows
+
+    return (
+        min(cfg.subtraj_window, max_len), cfg.subtraj_stride,
+        num_windows(max_len, cfg.subtraj_window, cfg.subtraj_stride),
+    )
+
+
+def _score_windowed(encoded, cand, betas, impl, subtraj, tuning):
+    """Windowed dispatch: pair ids are window ids; every impl family
+    scores the windowed [H, W] slices (fused masks in-kernel, the kernel
+    family slices via ``lcs_windowed``, jnp impls gather windows)."""
+    from repro.perf import resolve_wavefront_dtype
+
+    if impl in _KERNEL_MODES:
+        return _score_windowed_with_kernel(
+            encoded, cand, betas, subtraj=subtraj,
+            mode=_KERNEL_MODES[impl], tuning=tuning,
+        )
+    from repro.core.similarity import score_windowed_pairs
+
+    W, stride, nw = subtraj
+    return score_windowed_pairs(
+        encoded.codes, encoded.lengths, cand.left, cand.right, betas,
+        nw=nw, window=W, stride=stride, impl_name=impl,
+        wavefront_dtype=resolve_wavefront_dtype(tuning),
+    )
+
+
+def _score_windowed_with_kernel(encoded, cand, betas, *, subtraj,
+                                mode="auto", tuning=None):
+    """Windowed twin of :func:`_score_with_kernel`: decode (traj, offset)
+    from the window ids and run the batched kernel over the sliced
+    ``[P*H, W]`` windows (``kernels/lcs/ops.lcs_windowed``)."""
+    from repro.kernels.lcs import ops as lcs_ops
+    from repro.perf import resolve_wavefront_dtype
+
+    W, stride, nw = subtraj
+    li = jnp.where(cand.left == PAD_ID, 0, cand.left)
+    ri = jnp.where(cand.right == PAD_ID, 0, cand.right)
+    ta, tb = li // nw, ri // nw
+    oa = (li % nw).astype(jnp.int32) * stride
+    ob = (ri % nw).astype(jnp.int32) * stride
+    P = li.shape[0]
+    H, L = encoded.codes.shape[1], encoded.codes.shape[2]
+    rep = lambda x: jnp.repeat(x, H)
+    kwargs = {} if tuning is None else {"block_b": tuning.block_b}
+    level_lcs = lcs_ops.lcs_windowed(
+        encoded.codes[ta].reshape(P * H, L),
+        encoded.codes[tb].reshape(P * H, L),
+        rep(oa), rep(ob),
+        rep(encoded.lengths[ta]), rep(encoded.lengths[tb]),
+        window=W, mode=mode,
+        wavefront_dtype=resolve_wavefront_dtype(tuning), **kwargs,
+    ).reshape(P, H)
+    return level_lcs, mss_scores(level_lcs, betas)
 
 
 def _score_with_kernel(encoded, cand, betas, *, mode="auto", tuning=None):

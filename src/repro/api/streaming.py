@@ -141,6 +141,19 @@ class StreamingEngine:
                 f"unknown delta_join {plan.delta_join!r}; valid: "
                 f"{list(DELTA_JOINS)}"
             )
+        if config.subtraj_window is not None:
+            # Window ids are t * nw + j with nw derived from the world max
+            # length L — but the streaming world's L GROWS across updates,
+            # which would re-number every window id already resident in the
+            # bucket index / join slabs.  Subtrajectory streaming needs a
+            # fixed-L world contract first (ROADMAP); reject loudly rather
+            # than silently joining stale coordinates.
+            raise NotImplementedError(
+                "subtraj_window is not supported by StreamingEngine: the "
+                "streaming world's max length grows across updates, which "
+                "would invalidate resident window ids.  Use the batch "
+                "AnotherMeEngine for subtrajectory search."
+            )
         # the one-shot engine validates config/plan and owns the shared
         # pieces: forest tables, betas, backend, planner, mesh
         self._eng = AnotherMeEngine(forest, config, plan)

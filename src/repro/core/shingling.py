@@ -26,9 +26,29 @@ import numpy as np
 from repro.core.types import PAD_KEY
 
 
+# Hard budget on C(max_len, k): the combination table materializes
+# eagerly into an unbounded lru_cache, so an oversized (max_len, k) would
+# exhaust host memory before any shape error surfaced.  2M combos is
+# ~24 MB at k=3 — far above the paper's C(10, 3) = 120 but small enough
+# that the failure mode is a clear exception, not an OOM.
+MAX_SHINGLE_COMBOS = 2_000_000
+
+
 @functools.lru_cache(maxsize=None)
 def shingle_indices(max_len: int, k: int) -> np.ndarray:
     """All C(max_len, k) strictly-increasing index k-tuples, int32 [S, k]."""
+    from math import comb
+
+    n_combos = comb(max_len, k) if max_len >= k >= 0 else 0
+    if n_combos > MAX_SHINGLE_COMBOS:
+        raise ValueError(
+            f"C({max_len}, {k}) = {n_combos} shingle combinations exceeds "
+            f"the budget of {MAX_SHINGLE_COMBOS}; shingling the full "
+            "trajectory at this length would exhaust host memory.  Use the "
+            "windowed subtrajectory mode instead — "
+            "EngineConfig(subtraj_window=W) shingles C(W, k) combinations "
+            "per sliding window."
+        )
     combos = np.array(list(itertools.combinations(range(max_len), k)), dtype=np.int32)
     if combos.size == 0:
         combos = combos.reshape(0, k)
@@ -101,3 +121,35 @@ def shingles(encoded_codes: jnp.ndarray, lengths: jnp.ndarray, *, k: int,
     return shingles_from_types(
         encoded_codes[:, level, :], lengths, k=k, num_types=num_types, dedup=dedup
     )
+
+
+def windowed_types(
+    type_codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window: int,
+    stride: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sliding-window view for the subtrajectory mode: [N, L] -> [N*nw, W].
+
+    Window j of row i (j < nw, see :func:`repro.core.subtraj.num_windows`)
+    starts at offset ``j * stride`` and holds
+    ``clip(lengths[i] - j*stride, 0, W)`` valid positions; every window of
+    row i becomes its own virtual row ``i * nw + j``, so downstream key
+    machinery (``shingles_from_types``, MinHash, BRP) runs UNCHANGED over
+    the windowed view — a window's keys are ``S = C(W, k)`` combinations
+    instead of ``C(L, k)``.  Positions past a window's valid length gather
+    clamped garbage; callers mask by the returned window lengths exactly
+    as they mask full rows by ``lengths`` (both shingling and the hash
+    backends already do).
+    """
+    from repro.core.subtraj import num_windows
+
+    n, L = type_codes.shape
+    W = min(window, L)
+    nw = num_windows(L, window, stride)
+    offs = jnp.arange(nw, dtype=jnp.int32) * stride           # [nw]
+    pos = offs[:, None] + jnp.arange(W, dtype=jnp.int32)      # [nw, W]
+    win = type_codes[:, jnp.clip(pos, 0, L - 1)]              # [N, nw, W]
+    wlen = jnp.clip(lengths[:, None] - offs[None, :], 0, W)   # [N, nw]
+    return win.reshape(n * nw, W), wlen.reshape(n * nw)

@@ -157,6 +157,81 @@ def multi_level_lcs(
     return impl(a, b).reshape(P, H)
 
 
+def gather_windows(codes: jnp.ndarray, off: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Slice per-row windows out of gathered code rows.
+
+    codes [P, H, L], off [P] window start offsets -> [P, H, W] with
+    W = min(window, L).  Positions past ``L - 1`` clamp to the last column
+    (garbage); callers mask by the window's valid length — for any valid
+    position ``i < clip(len - off, 0, W)`` we have ``off + i < len <= L``,
+    so the clamp never corrupts a valid entry.
+    """
+    L = codes.shape[-1]
+    W = min(window, L)
+    pos = off[:, None, None] + jnp.arange(W, dtype=jnp.int32)
+    pos = jnp.clip(pos, 0, L - 1)
+    return jnp.take_along_axis(
+        codes, jnp.broadcast_to(pos, codes.shape[:-1] + (W,)), axis=-1
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nw", "window", "stride", "impl_name", "wavefront_dtype"),
+)
+def score_windowed_pairs(
+    codes: jnp.ndarray,
+    lengths: jnp.ndarray,
+    left: jnp.ndarray,
+    right: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    nw: int,
+    window: int,
+    stride: int = 1,
+    impl_name: str = "wavefront",
+    wavefront_dtype: jnp.dtype | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed ``score_pairs``: pair ids are WINDOW ids, not row ids.
+
+    codes [N, H, L], lengths [N], left/right [P] global window ids
+    (``traj = w // nw``, ``offset = (w % nw) * stride``) -> (level_lcs
+    [P, H], mss [P]) of the windowed slices.  The fused impls route to the
+    offset-aware fused kernel (the slices never materialize); the jnp
+    impls gather the [P, H, W] windows and reuse the batched LCS over
+    length-W rows (2W-1 wavefront steps instead of 2L-1).
+    """
+    from repro.core.types import PAD_ID
+
+    li = jnp.where(left == PAD_ID, 0, left)
+    ri = jnp.where(right == PAD_ID, 0, right)
+    ta, tb = li // nw, ri // nw
+    oa = (li % nw).astype(jnp.int32) * stride
+    ob = (ri % nw).astype(jnp.int32) * stride
+    if impl_name.startswith("fused"):
+        from repro.kernels.lcs import fused
+
+        mode = fused.FUSED_IMPL_MODES[impl_name]
+        return fused.fused_windowed_score(
+            codes, lengths, codes, lengths, ta, tb, oa, ob, betas,
+            window=window, mode=mode,
+        )
+    L = codes.shape[-1]
+    W = min(window, L)
+    wla = jnp.clip(lengths[ta] - oa, 0, W)
+    wlb = jnp.clip(lengths[tb] - ob, 0, W)
+    if impl_name == "wavefront":
+        dt = jnp.int8 if wavefront_dtype is None else wavefront_dtype
+        impl = functools.partial(lcs_wavefront, dtype=dt)
+    else:
+        impl = {"ref": lcs_ref}[impl_name]
+    lv = multi_level_lcs(
+        gather_windows(codes[ta], oa, window), wla,
+        gather_windows(codes[tb], ob, window), wlb, impl=impl,
+    )
+    return lv, mss_scores(lv, betas)
+
+
 def mss_scores(level_lcs: jnp.ndarray, betas: jnp.ndarray) -> jnp.ndarray:
     """MSS = sum_h beta_h * |M_h| (Definition 4). level_lcs [P, H] -> [P]."""
     return jnp.einsum("ph,h->p", level_lcs.astype(jnp.float32), betas)

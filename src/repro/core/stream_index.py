@@ -54,7 +54,14 @@ class BucketIndex:
         self._warned_keys: set[int] = set()
         self.num_rows = 0
         self.num_keys_inserted = 0
+        # LIFETIME pre-dedup collision count (monotone; what `insert`
+        # examined, never decremented — the work-accounting series)
         self.pairs_examined_total = 0
+        # LIVE sum_buckets C(|bucket|, 2), maintained incrementally by
+        # insert/retire — the join size a one-shot run over the CURRENT
+        # world would enumerate.  Before `retire` existed these two
+        # coincided; under TTL/eviction only this one stays exact.
+        self.live_join_size = 0
 
     @property
     def num_buckets(self) -> int:
@@ -111,6 +118,9 @@ class BucketIndex:
                         lo_out.append(m)
                         hi_out.append(rid)
                 if members[-1] != rid:  # keep each id once per bucket
+                    # the bucket grows |m| -> |m|+1: C(|m|+1, 2) - C(|m|, 2)
+                    # new live pairs, i.e. one per existing member
+                    self.live_join_size += len(members)
                     members.append(rid)
                     if (self.hot_bucket_warn is not None
                             and len(members) == self.hot_bucket_warn
@@ -174,6 +184,9 @@ class BucketIndex:
                 try:
                     members.remove(rid)
                     removed += 1
+                    # the bucket shrinks |m| -> |m|-1: the evicted member
+                    # contributed one live pair per REMAINING member
+                    self.live_join_size -= len(members)
                 except ValueError:
                     continue
                 if not members:
@@ -230,9 +243,12 @@ class BucketIndex:
 
     def full_join_size(self) -> int:
         """The pre-dedup pair count a one-shot join over the CURRENT world
-        would enumerate: ``sum_buckets C(|bucket|, 2)``.  O(1): each
-        bucket collision is examined exactly once — when its later member
-        arrives — so the running ``pairs_examined_total`` counter IS that
-        sum at all times (the partition property the equivalence suite
-        pins against an independent per-key oracle)."""
-        return self.pairs_examined_total
+        would enumerate: ``sum_buckets C(|bucket|, 2)``.  O(1): insert
+        adds each new collision to the live counter when the later member
+        arrives, and ``retire`` subtracts each evicted member's remaining
+        per-bucket contributions — so the counter tracks the live sum
+        exactly under TTL/windowed eviction (the partition property the
+        equivalence suite pins against an independent per-key oracle).
+        ``pairs_examined_total`` stays the LIFETIME examined count; before
+        the first retire the two coincide."""
+        return self.live_join_size

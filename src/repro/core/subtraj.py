@@ -1,0 +1,104 @@
+"""Subtrajectory ("windowed") coordinates: windows as virtual rows.
+
+The paper's "another me" matches whole trajectories; the richer scenario —
+users whose *mornings* match, commutes overlapping for an hour — needs
+subtrajectory similarity (Tampakis et al.'s distributed subtrajectory
+join, PAPERS.md).  The windowed-candidate mode
+(``EngineConfig(subtraj_window=W, subtraj_stride=s)``) reduces it to the
+existing whole-trajectory machinery by treating every sliding window as a
+VIRTUAL ROW:
+
+* trajectory ``t`` (padded length L) owns ``nw`` windows, where ``nw = 1``
+  if ``L <= W`` else ``(L - W) // s + 1`` — a STATIC shape quantity derived
+  from the padded length, so jit traces never depend on per-row lengths;
+  rows shorter than the padding simply own trailing empty windows (window
+  length 0) that emit no keys and never pair;
+* window ``j`` of trajectory ``t`` is global window id ``w = t * nw + j``,
+  covering positions ``[j*s, j*s + W)`` clipped to the row's true length —
+  the inverse map ``(traj, offset) = (w // nw, (w % nw) * s)`` is what the
+  scoring layer decodes to slice the resident ``[N, H, L]`` table;
+* the candidate layers (shingle/hash keys, routing, dedup, capacity
+  planning) run UNCHANGED over window ids; a final host-side
+  max-over-windows reduction (:func:`aggregate_window_pairs`) folds
+  window-pair scores back to trajectory pairs.
+
+``W >= L`` degenerates to ``nw = 1``, offset 0, window length = row length
+— bit-identical to the whole-trajectory mode by construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import PAD_ID
+
+
+def num_windows(max_len: int, window: int, stride: int = 1) -> int:
+    """Windows per trajectory row, from the PADDED length (shape-static).
+
+    Offsets ``0, s, 2s, ...`` while a window still starts inside the
+    padded row's coverage: the last window starts at the largest multiple
+    of ``stride`` <= ``max_len - window`` (so every position of a
+    full-length row is covered), and ``window >= max_len`` collapses to a
+    single window — the whole-trajectory degeneration.
+    """
+    if window < 1:
+        raise ValueError(f"subtraj window must be positive, got {window}")
+    if stride < 1:
+        raise ValueError(f"subtraj stride must be positive, got {stride}")
+    if max_len <= window:
+        return 1
+    return (max_len - window) // stride + 1
+
+
+def window_lengths(lengths, *, max_len: int, window: int, stride: int = 1):
+    """Per-window valid lengths: [N] -> [N*nw] (np in -> np out, jnp -> jnp).
+
+    Window j of row i holds ``clip(lengths[i] - j*stride, 0, min(W, L))``
+    positions — the quantity every masking/pruning layer uses in place of
+    the full row length (the MSS upper bound, the kernel repad, the
+    capacity planner's prune replay).
+    """
+    nw = num_windows(max_len, window, stride)
+    offs = np.arange(nw, dtype=np.int32) * stride
+    w = min(window, max_len)
+    wl = (lengths[:, None] - offs[None, :]).clip(0, w)
+    return wl.reshape(-1)
+
+
+def aggregate_window_pairs(left, right, level_lcs, mss, *, nw: int):
+    """Fold scored window pairs to trajectory pairs: max-over-windows MSS.
+
+    left/right: int window ids [P] (PAD_ID rows ignored), level_lcs
+    [P, H], mss [P] -> ``(tleft, tright, tlevel, tmss)`` numpy arrays with
+    ONE row per distinct ``(traj_lo, traj_hi)`` pair.  Same-trajectory
+    window pairs (overlapping windows of one user trivially match) are
+    dropped; each surviving pair reports the WINNING window pair's integer
+    level_lcs row and float32 mss, with mss ties broken to the
+    lexicographically smallest ``(window_lo, window_hi)`` — so every
+    backend, shard layout, and score mode aggregates to the identical
+    result, and the aggregate is invariant to the order pairs were scored
+    in.
+    """
+    left = np.asarray(left).reshape(-1)
+    right = np.asarray(right).reshape(-1)
+    level_lcs = np.asarray(level_lcs).reshape(left.shape[0], -1)
+    mss = np.asarray(mss).reshape(-1)
+    ta, tb = left // nw, right // nw
+    keep = (left != PAD_ID) & (ta != tb)
+    wl, wr = left[keep], right[keep]
+    lv, ms = level_lcs[keep], mss[keep]
+    lo = np.minimum(ta[keep], tb[keep])
+    hi = np.maximum(ta[keep], tb[keep])
+    if lo.size == 0:
+        return (np.empty(0, np.int32), np.empty(0, np.int32),
+                np.empty((0, level_lcs.shape[1]), lv.dtype),
+                np.empty(0, np.float32))
+    # group by (lo, hi); within a group the winner sorts first:
+    # descending mss, then ascending (window_lo, window_hi)
+    order = np.lexsort((wr, wl, -ms, hi, lo))
+    lo, hi = lo[order], hi[order]
+    first = np.ones(lo.shape[0], bool)
+    first[1:] = (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1])
+    rows = np.nonzero(first)[0]
+    return (lo[rows].astype(np.int32), hi[rows].astype(np.int32),
+            lv[order][rows], ms[order][rows])

@@ -66,22 +66,18 @@ FUSED_IMPL_MODES = {
 _DISPATCH_MODES = ("auto", "pallas", "interpret", "ref")
 
 
-def _fused_kernel(li_ref, ri_ref, lena_ref, lenb_ref,
-                  a_ref, b_ref, betas_ref, lvl_ref, mss_ref):
-    p = pl.program_id(0)
-    la = lena_ref[li_ref[p]]
-    lb = lenb_ref[ri_ref[p]]
-    a = a_ref[0]  # [H, L] int32 — our pair's left row, DMA'd by index map
-    b = b_ref[0]
+def _masked_rows_lcs(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """In-block multi-level LCS of sentinel-masked [H, L] rows -> [H] int8.
+
+    Rolling-window wavefront over all H levels at once (kernel.py scheme),
+    diagonals carried in int8 (LCS values <= L < 127).  The DP is position
+    agnostic: any masked-out entry (the side sentinels never equal each
+    other or a valid code) simply cannot contribute a match, so the LCS of
+    masked full rows equals the LCS of the surviving subsequences — which
+    is what lets the windowed kernel score a mid-row slice without moving
+    it to the front.
+    """
     H, L = a.shape
-
-    # in-register repad: positions >= length become the side sentinels
-    pos = jax.lax.broadcasted_iota(jnp.int32, (H, L), 1)
-    a = jnp.where(pos < la, a, PAD_CODE_A)
-    b = jnp.where(pos < lb, b, PAD_CODE_B)
-
-    # rolling-window wavefront over all H levels at once (kernel.py scheme),
-    # diagonals in int8: LCS values <= L < 127
     a_ext = jnp.concatenate(
         [jnp.full((H, 1), SENT_SHIFT, jnp.int32), a], axis=1
     )
@@ -109,9 +105,62 @@ def _fused_kernel(li_ref, ri_ref, lena_ref, lenb_ref,
         return d1, new, jnp.roll(win, 1, axis=1)
 
     _, d1, _ = jax.lax.fori_loop(0, 2 * L - 1, step, (zeros, zeros, window))
-    lvl = d1[:, L].astype(jnp.int32)  # dp[L, L] per level
+    return d1[:, L]  # dp[L, L] per level
+
+
+def _fused_kernel(li_ref, ri_ref, lena_ref, lenb_ref,
+                  a_ref, b_ref, betas_ref, lvl_ref, mss_ref):
+    p = pl.program_id(0)
+    la = lena_ref[li_ref[p]]
+    lb = lenb_ref[ri_ref[p]]
+    a = a_ref[0]  # [H, L] int32 — our pair's left row, DMA'd by index map
+    b = b_ref[0]
+    H, L = a.shape
+
+    # in-register repad: positions >= length become the side sentinels
+    pos = jax.lax.broadcasted_iota(jnp.int32, (H, L), 1)
+    a = jnp.where(pos < la, a, PAD_CODE_A)
+    b = jnp.where(pos < lb, b, PAD_CODE_B)
+
+    lvl = _masked_rows_lcs(a, b).astype(jnp.int32)
     lvl_ref[0, :] = lvl
     # fused mss_scores epilogue: sum_h beta_h * |M_h| in float32
+    mss_ref[0, 0] = jnp.sum(lvl.astype(jnp.float32) * betas_ref[0])
+
+
+def _fused_windowed_kernel(li_ref, ri_ref, lena_ref, lenb_ref,
+                           offa_ref, offb_ref, a_ref, b_ref, betas_ref,
+                           lvl_ref, mss_ref, *, window):
+    """Subtrajectory variant: the scalar-prefetch tuple grows from
+    ``(left, right, len_a, len_b)`` to include per-side window offsets.
+
+    BlockSpec index maps are block granular, so the windowed [H, W] slice
+    cannot be DMA'd at an element offset directly — instead the block DMAs
+    its pair's full [H, L] rows (same traffic as the whole-trajectory
+    kernel) and masks everything OUTSIDE ``[off, off + wlen)`` to the side
+    sentinels in VREGs.  Sentinels never match, so the masked full-row LCS
+    IS the windowed LCS (see :func:`_masked_rows_lcs`), the wavefront
+    stays 2L-1 steps, and the gathered windowed operand copies never
+    exist in HBM.
+    """
+    p = pl.program_id(0)
+    la = lena_ref[li_ref[p]]
+    lb = lenb_ref[ri_ref[p]]
+    oa = offa_ref[p]
+    ob = offb_ref[p]
+    a = a_ref[0]
+    b = b_ref[0]
+    H, L = a.shape
+    # window lengths in-kernel: clip(len - off, 0, W) with W static
+    wla = jnp.clip(la - oa, 0, window)
+    wlb = jnp.clip(lb - ob, 0, window)
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (H, L), 1)
+    a = jnp.where((pos >= oa) & (pos < oa + wla), a, PAD_CODE_A)
+    b = jnp.where((pos >= ob) & (pos < ob + wlb), b, PAD_CODE_B)
+
+    lvl = _masked_rows_lcs(a, b).astype(jnp.int32)
+    lvl_ref[0, :] = lvl
     mss_ref[0, 0] = jnp.sum(lvl.astype(jnp.float32) * betas_ref[0])
 
 
@@ -161,6 +210,69 @@ def fused_gather_score(
     )(
         left.astype(jnp.int32), right.astype(jnp.int32),
         len_a.astype(jnp.int32), len_b.astype(jnp.int32),
+        table_a, table_b, betas_row,
+    )
+    return lvl, mss[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def fused_windowed_gather_score(
+    table_a: jnp.ndarray,
+    len_a: jnp.ndarray,
+    table_b: jnp.ndarray,
+    len_b: jnp.ndarray,
+    left: jnp.ndarray,
+    right: jnp.ndarray,
+    off_a: jnp.ndarray,
+    off_b: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    window: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The raw windowed kernel call: tables + (traj, offset) coordinates.
+
+    Identical to :func:`fused_gather_score` except pairs carry per-side
+    window offsets: left/right [P] are TRAJECTORY indices into the tables,
+    off_a/off_b [P] the window start offsets, and the scored operand is
+    the [H, W] slice ``rows[:, off : off + clip(len - off, 0, window)]``.
+    The prefetch tuple is (left, right, len_a, len_b, off_a, off_b); each
+    grid block still DMAs its pair's [H, L] rows straight off the resident
+    table and windows them in-register.
+    """
+    P = left.shape[0]
+    _, H, L = table_a.shape
+    assert L < 127 and table_b.shape[1:] == (H, L)
+    betas_row = betas.reshape(1, H).astype(jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,  # left, right, len_a, len_b, off_a, off_b
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, H, L), lambda p, li, ri, la, lb, oa, ob: (li[p], 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, H, L), lambda p, li, ri, la, lb, oa, ob: (ri[p], 0, 0)
+            ),
+            pl.BlockSpec((1, H), lambda p, li, ri, la, lb, oa, ob: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H), lambda p, li, ri, la, lb, oa, ob: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, li, ri, la, lb, oa, ob: (p, 0)),
+        ],
+    )
+    lvl, mss = pl.pallas_call(
+        functools.partial(_fused_windowed_kernel, window=min(window, L)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((P, H), jnp.int32),
+            jax.ShapeDtypeStruct((P, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        left.astype(jnp.int32), right.astype(jnp.int32),
+        len_a.astype(jnp.int32), len_b.astype(jnp.int32),
+        off_a.astype(jnp.int32), off_b.astype(jnp.int32),
         table_a, table_b, betas_row,
     )
     return lvl, mss[:, 0]
@@ -218,6 +330,67 @@ def fused_score(
     interpret = True if mode == "interpret" else not _on_tpu()
     lvl, mss = fused_gather_score(
         table_a, len_a, table_b, len_b, left, right, betas, interpret=interpret
+    )
+    if exact_mss:
+        from repro.core.similarity import mss_scores
+
+        mss = mss_scores(lvl, betas)
+    return lvl, mss
+
+
+def fused_windowed_score_ref(
+    table_a, len_a, table_b, len_b, left, right, off_a, off_b, betas,
+    *, window: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp oracle for the windowed kernel: gather the [P, H, W] window
+    slices (``similarity.gather_windows``) and run the baseline
+    gather-then-score path over length-W rows — bit-identical by
+    construction to ``score_windowed_pairs(..., impl_name="wavefront")``."""
+    from repro.core.similarity import (
+        gather_windows, mss_scores, multi_level_lcs,
+    )
+
+    W = min(window, table_a.shape[-1])
+    wla = jnp.clip(len_a[left] - off_a, 0, W)
+    wlb = jnp.clip(len_b[right] - off_b, 0, W)
+    lvl = multi_level_lcs(
+        gather_windows(table_a[left], off_a, W), wla,
+        gather_windows(table_b[right], off_b, W), wlb,
+    )
+    return lvl, mss_scores(lvl, betas)
+
+
+def fused_windowed_score(
+    table_a: jnp.ndarray,
+    len_a: jnp.ndarray,
+    table_b: jnp.ndarray,
+    len_b: jnp.ndarray,
+    left: jnp.ndarray,
+    right: jnp.ndarray,
+    off_a: jnp.ndarray,
+    off_b: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    window: int,
+    mode: str = "auto",
+    exact_mss: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed twin of :func:`fused_score`: same dispatch modes, same
+    ``exact_mss`` contract, pairs carry (traj, offset) coordinates."""
+    if mode not in _DISPATCH_MODES:
+        raise ValueError(
+            f"unknown fused dispatch mode {mode!r}; "
+            f"valid: {list(_DISPATCH_MODES)}"
+        )
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return fused_windowed_score_ref(
+            table_a, len_a, table_b, len_b, left, right, off_a, off_b,
+            betas, window=window,
+        )
+    interpret = True if mode == "interpret" else not _on_tpu()
+    lvl, mss = fused_windowed_gather_score(
+        table_a, len_a, table_b, len_b, left, right, off_a, off_b, betas,
+        window=window, interpret=interpret,
     )
     if exact_mss:
         from repro.core.similarity import mss_scores

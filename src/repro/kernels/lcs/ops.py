@@ -28,6 +28,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.compat import on_tpu as _on_tpu
+from repro.core.encoding import PAD_CODE_A, PAD_CODE_B
 from repro.kernels.lcs.kernel import lcs_pallas
 from repro.core.similarity import lcs_wavefront, wavefront_dtype_from_env
 
@@ -94,3 +95,44 @@ def lcs(
     interpret = True if mode == "interpret" else not _on_tpu()
     # lcs_pallas auto-pads any remainder rows up to the block multiple
     return lcs_pallas(a, b, block_b=_block_for(B, block_b), interpret=interpret)
+
+
+def lcs_windowed(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    off_a: jnp.ndarray,
+    off_b: jnp.ndarray,
+    len_a: jnp.ndarray,
+    len_b: jnp.ndarray,
+    *,
+    window: int,
+    block_b: int = 512,
+    mode: str = "auto",
+    wavefront_dtype: jnp.dtype | None = None,
+) -> jnp.ndarray:
+    """Subtrajectory LCS: full rows + per-row window coordinates -> [B].
+
+    a/b int32 [B, L] code rows with the table's native padding (no repad
+    needed), off_a/off_b [B] window start offsets, len_a/len_b [B] the
+    rows' TRUE lengths.  Each row is sliced to its
+    ``[off, off + clip(len - off, 0, window))`` window, sentinel-repadded
+    to width ``min(window, L)``, and dispatched through :func:`lcs` — so
+    the batched kernel runs 2W-1 wavefront steps over width-W tiles
+    instead of 2L-1 over the full rows, and the same ``mode``/``block_b``
+    tuning surface applies.
+    """
+    B, L = a.shape
+    W = min(window, L)
+    pos = jnp.arange(W, dtype=jnp.int32)
+
+    def slice_side(x, off, length, pad_code):
+        wlen = jnp.clip(length - off, 0, W)
+        p = jnp.clip(off[:, None] + pos[None, :], 0, L - 1)
+        win = jnp.take_along_axis(x, p, axis=1)
+        return jnp.where(pos[None, :] < wlen[:, None], win, pad_code)
+
+    return lcs(
+        slice_side(a, off_a, len_a, PAD_CODE_A),
+        slice_side(b, off_b, len_b, PAD_CODE_B),
+        block_b=block_b, mode=mode, wavefront_dtype=wavefront_dtype,
+    )

@@ -40,6 +40,17 @@ and streaming — with a real-dispatch proof that the tuned record reaches
 ``lcs_impl_fn`` — and the chunked shuffle runner's per-update trace
 history must EQUAL the unchunked one (hop/score overlap adds zero
 steady-state recompiles).
+
+ISSUE 10 adds the SUBTRAJECTORY axis: every backend x SHARDS x
+{replicate, shuffle} x {wavefront, fused-interpret} run with
+``subtraj_window`` set must be bit-identical to the single-device
+subtrajectory engine (itself pinned to the brute-force windowed oracle in
+``test_subtrajectory.py``), and a re-run of the same batch must reuse the
+cached sharded runner — zero steady-state recompiles in windowed mode.
+
+All subprocess sweeps here are marked ``slow`` (tier-1 deselects them via
+pytest.ini's ``-m "not slow"``); CI runs them in a dedicated full-matrix
+step.
 """
 import os
 
@@ -117,6 +128,7 @@ print("OK", backend)
 """
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_parity_matrix(backend):
     out = run_subprocess(
@@ -156,6 +168,7 @@ print("OK", len(calls))
 """
 
 
+@pytest.mark.slow
 def test_sharded_pallas_dispatch_is_real():
     """ExecutionPlan(lcs_impl=...) must route the Pallas kernel into the
     shard_map score stage — not silently fall back to the wavefront."""
@@ -200,6 +213,7 @@ print("OK", len(calls))
 """
 
 
+@pytest.mark.slow
 def test_fused_dispatch_is_real():
     """lcs_impl="fused-interpret" must route the gather-free fused kernel
     into BOTH score paths — not silently fall back to the gather+wavefront
@@ -267,6 +281,7 @@ print("OK stream matrix")
 """
 
 
+@pytest.mark.slow
 def test_streaming_parity_matrix():
     """Streaming axis of the parity matrix: SHARDS x
     {replicate, shuffle} x {wavefront, fused-interpret} micro-batched runs
@@ -349,6 +364,7 @@ print("OK stream recompile", traces, len(calls), hist[2])
 """
 
 
+@pytest.mark.slow
 def test_streaming_updates_reuse_cached_sharded_runner():
     """Real-dispatch proof for streaming: the fused kernel is traced into
     the sharded streaming runner exactly once (compilation-counting hook =
@@ -436,6 +452,7 @@ print("OK autotune overlap matrix")
 """
 
 
+@pytest.mark.slow
 def test_autotune_overlap_parity_matrix():
     """Autotune + overlap axis: non-default tuned kernel parameters and
     chunked hop/score overlap stay bit-identical to the untuned serial
@@ -512,6 +529,7 @@ print("OK stream autotune overlap")
 """
 
 
+@pytest.mark.slow
 def test_streaming_autotune_overlap_parity():
     """Streaming axis of the autotune + overlap matrix: tuned parameters
     plus chunked shuffle scoring stay bit-identical to the single-device
@@ -579,6 +597,7 @@ print("OK delta_join matrix")
 """
 
 
+@pytest.mark.slow
 def test_streaming_delta_join_parity_matrix():
     """delta_join axis of the parity matrix: {host, device} x
     {replicate, shuffle} x {wavefront, fused-interpret} streaming runs are
@@ -633,6 +652,7 @@ print("OK device join dispatch", len(calls))
 """
 
 
+@pytest.mark.slow
 def test_device_join_never_calls_bucket_index():
     """Real-dispatch proof for delta_join="device": the join state lives
     in-mesh — BucketIndex.insert (the driver-side join) is never invoked,
@@ -670,3 +690,70 @@ def test_plan_lcs_impl_override_folds_into_config():
     with _pytest.raises(ValueError, match="lcs_impl"):
         AnotherMeEngine(forest, EngineConfig(),
                         ExecutionPlan(lcs_impl="no-such-impl"))
+
+
+SUBTRAJ_MATRIX_CODE = r"""
+import numpy as np
+from repro.api import AnotherMeEngine, EngineConfig, ExecutionPlan
+from repro.data import synthetic_setup
+
+backend = "%(backend)s"
+batch, forest = synthetic_setup(48, num_types=8, classes_per_type=4,
+                                num_places=60, seed=3)
+RHO = 1.05
+IMPLS = ("wavefront", "fused-interpret")
+
+
+def score_map(res):
+    sc = res.scored
+    cnt = int(sc.count)
+    left = np.asarray(sc.left)[:cnt]
+    right = np.asarray(sc.right)[:cnt]
+    mss = np.asarray(sc.mss)[:cnt]
+    lvl = np.asarray(sc.level_lcs)[:cnt]
+    return {
+        (int(a), int(b)): (float(m), tuple(int(x) for x in lv))
+        for a, b, m, lv in zip(left, right, mss, lvl)
+    }
+
+
+for impl in IMPLS:
+    cfg = EngineConfig(backend=backend, k=2, rho=RHO, lcs_impl=impl,
+                       subtraj_window=5, subtraj_stride=1)
+    # the single-device subtrajectory engine is the reference; it is
+    # itself pinned to the brute-force windowed oracle in
+    # test_subtrajectory.py
+    want = AnotherMeEngine(forest, cfg).run(batch)
+    for n_shards in %(shards)s:
+        modes = ("replicate", "shuffle") if n_shards > 1 else ("replicate",)
+        for mode in modes:
+            eng = AnotherMeEngine(
+                forest, cfg,
+                ExecutionPlan(n_shards=n_shards, score_mode=mode),
+            )
+            res = eng.run(batch)
+            cell = (backend, n_shards, mode, impl)
+            assert res.similar_pairs == want.similar_pairs, cell
+            assert res.communities == want.communities, cell
+            assert score_map(res) == score_map(want), cell
+            if n_shards > 1:
+                # steady state: a same-shape re-run must reuse the ONE
+                # cached compiled runner — zero recompiles in windowed mode
+                res2 = eng.run(batch)
+                assert len(eng._runner_cache) == 1, cell
+                assert score_map(res2) == score_map(res), cell
+print("OK subtraj", backend)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_subtraj_parity_matrix(backend):
+    """Subtrajectory axis of the parity matrix: SHARDS x
+    {replicate, shuffle} x {wavefront, fused-interpret} windowed runs are
+    bit-identical to the single-device subtrajectory engine, and re-runs
+    reuse the cached sharded runner (zero steady-state recompiles)."""
+    out = run_subprocess(SUBTRAJ_MATRIX_CODE % {"backend": backend,
+                                                "shards": SHARDS},
+                         devices=DEVICES)
+    assert f"OK subtraj {backend}" in out

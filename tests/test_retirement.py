@@ -428,6 +428,57 @@ def test_stream_join_stats_retire_compact_ledger():
     assert st.dead_fraction() == 0.0
 
 
+def test_bucket_index_full_join_size_is_live_not_lifetime():
+    """``full_join_size()`` tracks the LIVE ``sum_buckets C(|b|, 2)``
+    under interleaved insert/retire, while ``pairs_examined_total`` stays
+    the monotone lifetime count (ISSUE 10 satellite: the two coincided in
+    insert-only worlds and silently diverged once ``retire`` landed —
+    lifetime overstates the one-shot bound of the current world)."""
+    from repro.core.stream_index import BucketIndex
+
+    rng = np.random.default_rng(7)
+    idx = BucketIndex(hot_bucket_warn=None)
+    kept: dict[int, np.ndarray] = {}
+    next_id = 0
+
+    def brute_live() -> int:
+        return sum(
+            len(m) * (len(m) - 1) // 2 for m in idx._buckets.values()
+        )
+
+    for step in range(6):
+        d = int(rng.integers(2, 6))
+        keys = rng.integers(0, 9, size=(d, 4)).astype(np.int32)
+        keys[rng.random(size=keys.shape) < 0.25] = PAD_KEY
+        idx.insert(keys)
+        for r in range(d):
+            kept[next_id] = keys[r]
+            next_id += 1
+        assert idx.full_join_size() == brute_live()
+        if step == 0:
+            # insert-only world: live == lifetime by construction
+            assert idx.full_join_size() == idx.pairs_examined_total
+
+        live_ids = sorted(kept)
+        ret = rng.choice(live_ids, size=min(2, len(live_ids)), replace=False)
+        ret_keys = np.stack([kept.pop(int(i)) for i in ret])
+        lifetime_before = idx.pairs_examined_total
+        idx.retire(ret, ret_keys)
+        # retire evicts live pairs but never rewrites the work ledger
+        assert idx.pairs_examined_total == lifetime_before
+        assert idx.full_join_size() == brute_live()
+        idx.retire(ret, ret_keys)  # idempotent: no double decrement
+        assert idx.full_join_size() == brute_live()
+
+    # the live count equals a FRESH index built over only the live rows
+    fresh = BucketIndex(hot_bucket_warn=None)
+    fresh.insert(np.stack([kept[i] for i in sorted(kept)]))
+    assert fresh.full_join_size() == idx.full_join_size()
+    assert fresh.pairs_examined_total == fresh.full_join_size()
+    # lifetime is a (strict, here) upper bound on the live join size
+    assert idx.pairs_examined_total > idx.full_join_size()
+
+
 def test_shard_summaries_rebuild_matches_bruteforce():
     rng = np.random.default_rng(23)
     for n_sh in (1, 2, 4):

@@ -45,6 +45,10 @@ from repro.core.encoding import encode_types, forest_tables
 from repro.core.types import PAD_ID, PAD_KEY, TrajectoryBatch
 from repro.data import synthetic_setup
 
+# heavy differential sweeps: excluded from tier-1 (pytest.ini deselects
+# the slow marker); CI runs this module in the dedicated full-matrix step
+pytestmark = pytest.mark.slow
+
 BACKENDS = ("ssh", "minhash", "brp", "udf")
 
 
